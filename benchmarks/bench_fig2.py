@@ -1,0 +1,49 @@
+"""Paper Figure 2: effectiveness & efficiency vs number of segments per
+document (DeepTileBars + SEINE protocol)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit
+
+
+def run(segment_counts=(1, 5, 10, 20, 30)) -> list:
+    from repro.data.metrics import evaluate_ranking, mean_metrics
+    from repro.retrievers import get_retriever
+    from repro.serving import SeineEngine
+    from .bench_table1 import _measure_test_ms, _train_briefly
+
+    rows = []
+    for n_b in segment_counts:
+        w = bench_world(n_segments=n_b)
+        index = w["index"]
+        queries, qrels = w["queries"], w["ds"].qrels
+        spec = get_retriever("deeptilebars")
+        t0 = time.perf_counter()
+        params, train_ms = _train_briefly(spec, index, queries, qrels,
+                                          steps=40)
+        eng = SeineEngine(index, "deeptilebars", params)
+        test_ms = _measure_test_ms(eng, queries, qrels, n=32)
+        per_q = []
+        for qi in range(len(queries)):
+            docs = jnp.arange(qrels.shape[1])
+            s = np.asarray(eng.score(jnp.asarray(queries[qi]), docs))
+            per_q.append(evaluate_ranking(s, qrels[qi]))
+        mm = mean_metrics(per_q)
+        rows.append((f"fig2/segments={n_b}", test_ms * 1e3,
+                     f"P@10={mm['P@10']:.3f};MAP={mm['MAP']:.3f};"
+                     f"train_ms={train_ms:.2f};test_ms={test_ms:.3f};"
+                     f"index_mb={index.nbytes/1e6:.1f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Algorithm 1: indexing throughput (the Spark-acceleration claim, TPU-
+style). Measures docs/sec of the fused interaction builder vs corpus size,
+and the per-batch device time of the jit'd v-d interaction pass (which is
+what shards across the data axis on a pod — see EXPERIMENTS.md §Dry-run
+seine/index_build for the 256-chip lowering)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit
+
+
+def run() -> list:
+    from repro.core import IndexBuilder, make_batch_interaction_fn
+    from repro.core.builder import unique_terms_host
+
+    w = bench_world()
+    cfg, vocab, provider = w["cfg"], w["vocab"], w["provider"]
+    rows = []
+
+    # end-to-end build throughput vs corpus size
+    for n in (100, 200, 400):
+        toks, segs = w["toks"][:n], w["segs"][:n]
+        b = IndexBuilder(cfg, vocab, provider)
+        t0 = time.perf_counter()
+        idx = b.build(toks, segs, batch_size=32)
+        dt = time.perf_counter() - t0
+        rows.append((f"index_build/docs={n}", dt / n * 1e6,
+                     f"docs_per_s={n/dt:.1f};nnz={idx.nnz}"))
+
+    # device-pass timing (the shardable inner loop, amortised)
+    b = IndexBuilder(cfg, vocab, provider)
+    fn = make_batch_interaction_fn(provider, jnp.asarray(vocab.idf), b.ip,
+                                   cfg.n_segments, b.functions)
+    toks, segs = w["toks"][:32], w["segs"][:32]
+    uniq = unique_terms_host(toks, 256)
+    args = (jnp.asarray(toks), jnp.asarray(segs), jnp.asarray(uniq))
+    jax.block_until_ready(fn(*args))  # compile+warm
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / reps
+    rows.append(("index_build/device_pass_batch32", dt * 1e6,
+                 f"docs_per_s_device={32/dt:.1f}"))
+
+    # sigma_index sparsity/size tradeoff (Algorithm 1 line 8)
+    for sigma in (0.0, 1.0, 2.0):
+        c = dataclasses.replace(cfg, sigma_index=sigma)
+        b = IndexBuilder(c, vocab, provider)
+        idx = b.build(w["toks"][:200], w["segs"][:200], batch_size=32)
+        rows.append((f"index_build/sigma={sigma}", 0.0,
+                     f"nnz={idx.nnz};mb={idx.nbytes/1e6:.1f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Kernel microbenches: jnp reference path timing on CPU + analytic TPU
+roofline for each Pallas kernel (interpret-mode timings are meaningless, so
+the TPU numbers are derived from the kernel's flop/byte counts vs v5e
+peaks — the same three-term model as EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _time(f, *args, reps=3):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list:
+    from repro.kernels import (embed_bag_ref, flash_attn_ref, knrm_pool_ref,
+                               seg_interact_ref)
+
+    rows = []
+
+    # seg_interact: V x (S x Ls) x De
+    V, S, Ls, De = 4096, 64, 256, 128
+    ev = jax.random.normal(jax.random.key(0), (V, De))
+    st = jax.random.normal(jax.random.key(1), (S, Ls, De))
+    mask = jnp.ones((S, Ls))
+    f = jax.jit(seg_interact_ref)
+    dt = _time(f, ev, st, mask)
+    flops = 2 * V * S * Ls * De * 3          # three GEMM-like passes
+    hbm = 4 * (V * De + S * Ls * De + V * S * 3)
+    naive_hbm = hbm + 4 * V * S * Ls * 3     # unfused writes score tensors
+    rows.append(("kernels/seg_interact/ref_cpu", dt * 1e6,
+                 f"tpu_compute_us={flops/PEAK*1e6:.1f};"
+                 f"tpu_mem_us={hbm/HBM*1e6:.1f};"
+                 f"fusion_hbm_saving={naive_hbm/hbm:.1f}x"))
+
+    # knrm_pool: B x Q x n_b -> K
+    B, Q, nb, K = 1024, 8, 20, 11
+    c = jax.random.uniform(jax.random.key(2), (B, Q, nb), minval=-1, maxval=1)
+    m = jnp.ones((B, nb))
+    f = jax.jit(knrm_pool_ref)
+    dt = _time(f, c, m)
+    hbm = 4 * (B * Q * nb + B * Q * K)
+    naive = hbm + 4 * B * Q * nb * K
+    rows.append(("kernels/knrm_pool/ref_cpu", dt * 1e6,
+                 f"tpu_mem_us={hbm/HBM*1e6:.3f};"
+                 f"fusion_hbm_saving={naive/hbm:.1f}x"))
+
+    # flash_attn
+    B, S, Hq, Hkv, hd = 2, 1024, 8, 2, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    f = jax.jit(lambda q, k, v: flash_attn_ref(q, k, v, causal=True))
+    dt = _time(f, q, k, v)
+    flops = 4 * B * Hq * S * S * hd / 2      # causal halves it
+    hbm_flash = 4 * (3 * B * S * Hq * hd)    # no score matrix in HBM
+    hbm_naive = hbm_flash + 4 * B * Hq * S * S
+    rows.append(("kernels/flash_attn/ref_cpu", dt * 1e6,
+                 f"tpu_compute_us={flops/PEAK*1e6:.1f};"
+                 f"hbm_saving={hbm_naive/hbm_flash:.1f}x"))
+
+    # embed_bag
+    Vt, D, Bb = 100_000, 128, 4096
+    rng = np.random.RandomState(0)
+    lens = rng.randint(1, 30, Bb)
+    offs = np.concatenate([[0], np.cumsum(lens)])[:-1].astype(np.int32)
+    idx = rng.randint(0, Vt, int(lens.sum())).astype(np.int32)
+    table = jax.random.normal(jax.random.key(4), (Vt, D))
+    f = jax.jit(lambda t, i, o: embed_bag_ref(t, i, o, n_bags=Bb))
+    dt = _time(f, table, jnp.asarray(idx), jnp.asarray(offs))
+    hbm_kernel = 4 * (int(lens.sum()) * D + Bb * D)
+    hbm_ref = hbm_kernel + 4 * int(lens.sum()) * D   # ref materialises rows
+    rows.append(("kernels/embed_bag/ref_cpu", dt * 1e6,
+                 f"tpu_mem_us={hbm_kernel/HBM*1e6:.1f};"
+                 f"hbm_saving={hbm_ref/hbm_kernel:.1f}x"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""SNRM indexing baseline (Table 1 middle block): train the sparse latent
+encoder, index latent words, and measure effectiveness degradation vs SEINE
+— the paper's lexical-loss finding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit
+
+
+def run() -> list:
+    from repro.core import snrm as S
+    from repro.data.metrics import evaluate_ranking, mean_metrics
+    from repro.train import adam, apply_updates
+
+    w = bench_world()
+    toks, queries, qrels = w["toks"], w["queries"], w["ds"].qrels
+    p = S.init_snrm(jax.random.key(0), w["vocab"].size, d_latent=128)
+    opt = adam(3e-3)
+    state = opt.init(p)
+    rng = np.random.RandomState(0)
+    for step in range(80):
+        qi = rng.randint(0, len(queries), 16)
+        pos, neg = [], []
+        for q in qi:
+            rel = np.flatnonzero(qrels[q] > 0)
+            nrel = np.flatnonzero(qrels[q] == 0)
+            pos.append(rel[rng.randint(rel.size)] if rel.size else 0)
+            neg.append(nrel[rng.randint(nrel.size)] if nrel.size else 1)
+        batch = {"query": jnp.asarray(queries[qi]),
+                 "pos": jnp.asarray(toks[pos]), "neg": jnp.asarray(toks[neg])}
+        loss, g = jax.value_and_grad(S.snrm_loss)(p, batch)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+
+    # latent dot-product retrieval over the full corpus
+    d_lat = np.asarray(S.encode(p, jnp.asarray(toks)))      # (n_docs, L)
+    per_q = []
+    for qi in range(len(queries)):
+        zq = np.asarray(S.encode(p, jnp.asarray(queries[qi][None])))[0]
+        s = d_lat @ zq
+        per_q.append(evaluate_ranking(s, qrels[qi]))
+    mm = mean_metrics(per_q)
+    sparsity = float((d_lat > 0).mean())
+    return [("snrm/dot_latent", 0.0,
+             f"P@5={mm['P@5']:.3f};P@10={mm['P@10']:.3f};MAP={mm['MAP']:.3f};"
+             f"latent_density={sparsity:.3f};final_loss={float(loss):.3f}")]
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

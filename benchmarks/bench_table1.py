@@ -1,0 +1,122 @@
+"""Paper Table 1: retrieval effectiveness AND efficiency per
+(indexing method x retrieval method) on the synthetic-LETOR benchmark.
+
+Rows: No-Index / SNRM / SEINE x {dot, bm25(+DeepCT), knrm, hint,
+deeptilebars}. Efficiency = mean wall-clock per (q,d) pair at train
+(interaction + score + grad) and test (interaction + score) time, exactly
+the paper's protocol; effectiveness = P@5/P@10/MAP/nDCG@5/nDCG@10 averaged
+over queries (single fold on CPU; --folds 5 reproduces the CV protocol).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit
+
+
+def _train_briefly(spec, index, queries, qrels, *, steps=40, seed=0):
+    from repro.data.batching import PairSampler
+    from repro.serving import make_qmeta
+    from repro.train import TrainState, adam, fit, make_train_step
+
+    params = spec.init(jax.random.key(seed), index.n_b, index.functions)
+    if not params:
+        return params, 0.0
+
+    def loss_fn(params, batch):
+        def one(qi, p, n):
+            sp = spec.score(params, index.qd_matrix(qi, p[None]),
+                            make_qmeta(index, qi, p[None]), index.functions)
+            sn = spec.score(params, index.qd_matrix(qi, n[None]),
+                            make_qmeta(index, qi, n[None]), index.functions)
+            return jnp.maximum(0.0, 1.0 - sp + sn).mean()
+        return jax.vmap(one)(batch["q"], batch["pos"], batch["neg"]).mean()
+
+    sampler = PairSampler(qrels, np.arange(qrels.shape[0]), batch_size=16,
+                          seed=seed)
+
+    def nb(step):
+        b = sampler.next_batch()
+        return {"q": jnp.asarray(queries[b["query"]]),
+                "pos": jnp.asarray(b["pos"]), "neg": jnp.asarray(b["neg"])}
+
+    opt = adam(3e-3)
+    step_fn = make_train_step(loss_fn, opt, donate=False)
+    st = TrainState(params=params, opt_state=opt.init(params),
+                    residual=jax.tree.map(
+                        lambda p: jnp.zeros_like(p, jnp.float32), params))
+    t0 = time.perf_counter()
+    res = fit(st, step_fn, nb, n_steps=steps, verbose=False)
+    # per-sample training ms (paper's "Training (ms)"): time/step / batch
+    ms_per_pair = (time.perf_counter() - t0) / steps / 16 * 1e3
+    return res.state.params, ms_per_pair
+
+
+def _measure_test_ms(engine, queries, qrels, n=64):
+    """Mean ms per (q,d) pair at test time."""
+    rng = np.random.RandomState(0)
+    # warm
+    engine.score(jnp.asarray(queries[0]), jnp.arange(8))
+    t0 = time.perf_counter()
+    pairs = 0
+    for i in range(n):
+        qi = i % len(queries)
+        docs = rng.randint(0, qrels.shape[1], 8)
+        jax.block_until_ready(
+            engine.score(jnp.asarray(queries[qi]), jnp.asarray(docs)))
+        pairs += 8
+    return (time.perf_counter() - t0) / pairs * 1e3
+
+
+def run(folds: int = 1) -> list:
+    from repro.data.metrics import evaluate_ranking, mean_metrics
+    from repro.retrievers import get_retriever
+    from repro.serving import NoIndexEngine, SeineEngine
+
+    w = bench_world()
+    index, builder = w["index"], w["builder"]
+    queries, qrels = w["queries"], w["ds"].qrels
+    rows = []
+    out_rows = []
+
+    for retriever in ("dot", "bm25", "bm25_deepct", "knrm", "hint",
+                      "deeptilebars"):
+        spec = get_retriever(retriever)
+        params, train_ms_idx = _train_briefly(spec, index, queries, qrels)
+
+        for engine_name in ("noindex", "seine"):
+            if engine_name == "seine":
+                eng = SeineEngine(index, retriever, params)
+            else:
+                eng = NoIndexEngine(builder, index, w["toks"], w["segs"],
+                                    retriever, params)
+            ms = _measure_test_ms(eng, queries, qrels, n=32)
+            per_q = []
+            for qi in range(len(queries)):
+                docs = jnp.arange(qrels.shape[1])
+                s = np.asarray(eng.score(jnp.asarray(queries[qi]), docs))
+                per_q.append(evaluate_ranking(s, qrels[qi]))
+            mm = mean_metrics(per_q)
+            derived = (f"P@5={mm['P@5']:.3f};P@10={mm['P@10']:.3f};"
+                       f"MAP={mm['MAP']:.3f};nDCG@5={mm['nDCG@5']:.3f};"
+                       f"nDCG@10={mm['nDCG@10']:.3f}")
+            out_rows.append((f"table1/{engine_name}/{retriever}/test",
+                             ms * 1e3, derived))
+        # speedup row (the paper's headline column)
+        t_no = out_rows[-2][1]
+        t_se = out_rows[-1][1]
+        out_rows.append((f"table1/speedup/{retriever}", t_se,
+                         f"test_speedup={t_no / max(t_se, 1e-9):.1f}x"))
+    return out_rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared benchmark world: a mid-scale synthetic-LETOR instance (bigger than
+the test smoke world, smaller than full MQ2007 so the suite finishes on CPU).
+Scale knobs via env: REPRO_BENCH_DOCS / REPRO_BENCH_QUERIES."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+N_DOCS = int(os.environ.get("REPRO_BENCH_DOCS", 200))
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", 24))
+
+
+@lru_cache(maxsize=4)
+def bench_world(n_segments: int = 20, seed: int = 0):
+    from repro.configs import SEINE_LETOR
+    from repro.core import (HashProvider, IndexBuilder, build_vocabulary,
+                            segment_corpus)
+    from repro.data.batching import pad_queries
+    from repro.data.synth_corpus import generate
+
+    cfg = dataclasses.replace(
+        SEINE_LETOR, n_docs=N_DOCS, n_queries=N_QUERIES,
+        avg_doc_len=300, n_segments=n_segments)
+    ds = generate(cfg, seed=seed)
+    vocab = build_vocabulary(ds.docs, ds.n_raw_tokens,
+                             keep_frac=cfg.vocab_keep_frac)
+    slot_docs = [vocab.map_tokens(d) for d in ds.docs]
+    toks, segs = segment_corpus(slot_docs, cfg.n_segments, max_len=256,
+                                window=cfg.tile_window)
+    provider = HashProvider(vocab.size, cfg.embed_dim, seed=seed)
+    builder = IndexBuilder(cfg, vocab, provider)
+    t0 = time.perf_counter()
+    index = builder.build(toks, segs, batch_size=32)
+    build_s = time.perf_counter() - t0
+    queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
+    return dict(cfg=cfg, ds=ds, vocab=vocab, toks=toks, segs=segs,
+                provider=provider, builder=builder, index=index,
+                queries=queries, build_s=build_s)
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract)."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,17 @@
+"""Batched query serving over the SEINE index vs the No-Index baseline —
+the paper's Table-1 efficiency story as a running service.
+
+    PYTHONPATH=src python examples/serve_queries.py
+"""
+from repro.launch import serve
+
+
+def main() -> None:
+    import sys
+    sys.argv = [sys.argv[0], "--retriever", "knrm", "--n-queries", "16",
+                "--candidates", "60", "--compare-noindex"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

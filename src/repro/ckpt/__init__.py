@@ -1,0 +1,5 @@
+from .checkpoint import (all_steps, latest_step, restore_checkpoint,
+                         save_checkpoint, wait_async)
+
+__all__ = ["all_steps", "latest_step", "restore_checkpoint",
+           "save_checkpoint", "wait_async"]

@@ -1,0 +1,54 @@
+"""Architecture / experiment config registry.
+
+``get_bundle("yi-9b")`` -> ArchBundle with the exact published config and the
+assigned input-shape set. ``smoke(arch_id)`` -> reduced config of the same
+family for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from . import gnn_archs, lm_archs, recsys_archs
+from .base import (ArchBundle, MACEConfig, MoEConfig, RecsysConfig,
+                   SeineConfig, ShapeConfig, TransformerConfig,
+                   LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES)
+from .seine_letor import SEINE_LETOR, seine_smoke
+
+_BUNDLES: Dict[str, ArchBundle] = {}
+_BUNDLES.update(lm_archs.LM_BUNDLES)
+_BUNDLES.update(gnn_archs.GNN_BUNDLES)
+_BUNDLES.update(recsys_archs.RECSYS_BUNDLES)
+
+ALL_ARCH_IDS = tuple(sorted(_BUNDLES))
+
+
+def get_bundle(arch_id: str) -> ArchBundle:
+    if arch_id not in _BUNDLES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ALL_ARCH_IDS}")
+    return _BUNDLES[arch_id]
+
+
+def smoke(arch_id: str):
+    b = get_bundle(arch_id)
+    if b.domain == "lm":
+        return lm_archs.smoke_config(b.config)
+    if b.domain == "gnn":
+        return gnn_archs.smoke_config(b.config)
+    if b.domain == "recsys":
+        return recsys_archs.smoke_config(b.config)
+    raise ValueError(b.domain)
+
+
+def all_cells():
+    """Yield every (arch_id, shape_name) dry-run cell — 40 total."""
+    for aid in ALL_ARCH_IDS:
+        for s in get_bundle(aid).shapes:
+            yield aid, s.name
+
+
+__all__ = [
+    "ArchBundle", "MACEConfig", "MoEConfig", "RecsysConfig", "SeineConfig",
+    "ShapeConfig", "TransformerConfig", "ALL_ARCH_IDS", "get_bundle", "smoke",
+    "all_cells", "SEINE_LETOR", "seine_smoke",
+    "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+]

@@ -1,0 +1,137 @@
+"""Distributed index builder — the paper's Algorithm 1 without Spark.
+
+Spark op -> TPU-native equivalent (DESIGN.md §2):
+  Vocab/Corpus RDDs          -> document batches sharded on the `data` mesh axis
+  cartesian(Vocab, Segmts)   -> per-doc unique-term x segment evaluation
+                                (sigma=0 filter applied *at compute time*:
+                                only present terms produce rows)
+  map(interaction)           -> one fused jit pass over all atomic functions
+  filter(tf > sigma)         -> tf-threshold mask on the produced rows
+  reshape v-S -> v-d          -> (U, n_b, n_f) rows keyed by (term, doc)
+  saveAsPickleFile           -> ckpt.save_index
+
+The device pass is a single jit'd, vmap'd function; under a mesh it runs
+SPMD with documents sharded (shard_map-equivalent by in_shardings), which is
+the same communication pattern Spark's shuffle-free cartesian enjoys.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import SeineConfig
+from .index import SegmentInvertedIndex, build_from_rows
+from .interactions import (FUNCTION_NAMES, doc_interactions,
+                           init_interaction_params)
+from .providers import EmbeddingProvider
+from .vocab import Vocabulary
+
+
+def unique_terms_host(tokens: np.ndarray, max_uniq: int) -> np.ndarray:
+    """Per-doc unique vocab slots padded to max_uniq with -1 (host pass)."""
+    n_docs = tokens.shape[0]
+    out = np.full((n_docs, max_uniq), -1, np.int32)
+    for i in range(n_docs):
+        u = np.unique(tokens[i][tokens[i] >= 0])[:max_uniq]
+        out[i, :u.size] = u
+    return out
+
+
+def make_batch_interaction_fn(provider: EmbeddingProvider, idf: jnp.ndarray,
+                              ip: Dict[str, Any], n_b: int,
+                              functions: Sequence[str]):
+    """jit'd (tokens (B,Lp), segs (B,Lp), uniq (B,U)) -> (B, U, n_b, n_f)."""
+    table = provider.table()
+
+    def one_doc(tok, seg, uniq):
+        ctx = provider.contextualize(tok, seg)
+        return doc_interactions(tok, seg, uniq, table=table, idf=idf,
+                                ctx_emb=ctx, ip=ip, n_b=n_b,
+                                functions=functions)
+
+    return jax.jit(jax.vmap(one_doc))
+
+
+class IndexBuilder:
+    def __init__(self, cfg: SeineConfig, vocab: Vocabulary,
+                 provider: EmbeddingProvider,
+                 ip: Optional[Dict[str, Any]] = None,
+                 functions: Optional[Sequence[str]] = None):
+        self.cfg = cfg
+        self.vocab = vocab
+        self.provider = provider
+        self.functions = tuple(functions or cfg.functions)
+        self.ip = ip if ip is not None else init_interaction_params(
+            jax.random.key(17), provider.embed_dim)
+        self._idf = jnp.asarray(vocab.idf)
+
+    def build(self, tokens: np.ndarray, seg_ids: np.ndarray, *,
+              batch_size: int = 32, max_uniq: Optional[int] = None,
+              verbose: bool = False) -> SegmentInvertedIndex:
+        """tokens/seg_ids: (n_docs, Lp) from segment.segment_corpus."""
+        n_docs, Lp = tokens.shape
+        n_b = self.cfg.n_segments
+        max_uniq = max_uniq or min(Lp, 512)
+        uniq = unique_terms_host(tokens, max_uniq)
+        fn = make_batch_interaction_fn(self.provider, self._idf, self.ip,
+                                       n_b, self.functions)
+        rows_d: List[np.ndarray] = []
+        rows_t: List[np.ndarray] = []
+        rows_v: List[np.ndarray] = []
+        tf_i = self.functions.index("tf") if "tf" in self.functions else None
+        t0 = time.perf_counter()
+        for s in range(0, n_docs, batch_size):
+            e = min(s + batch_size, n_docs)
+            pad = batch_size - (e - s)
+            tb = np.pad(tokens[s:e], ((0, pad), (0, 0)), constant_values=-1)
+            sb = np.pad(seg_ids[s:e], ((0, pad), (0, 0)), constant_values=n_b - 1)
+            ub = np.pad(uniq[s:e], ((0, pad), (0, 0)), constant_values=-1)
+            vals = np.asarray(fn(jnp.asarray(tb), jnp.asarray(sb), jnp.asarray(ub)))
+            vals = vals[:e - s]
+            for i in range(e - s):
+                present = ub[i] >= 0
+                if tf_i is not None:  # Algorithm 1 line 8: filter(tf > sigma)
+                    present &= vals[i, :, :, tf_i].sum(-1) > self.cfg.sigma_index
+                idxs = np.flatnonzero(present)
+                rows_d.append(np.full(idxs.size, s + i, np.int32))
+                rows_t.append(ub[i, idxs])
+                rows_v.append(vals[i, idxs])
+            if verbose and (s // batch_size) % 16 == 0:
+                print(f"  built {e}/{n_docs} docs "
+                      f"({(time.perf_counter()-t0):.1f}s)")
+        doc_len = (tokens >= 0).sum(1).astype(np.float32)
+        seg_len = np.zeros((n_docs, n_b), np.float32)
+        for b in range(n_b):
+            seg_len[:, b] = ((seg_ids == b) & (tokens >= 0)).sum(1)
+        return build_from_rows(
+            np.concatenate(rows_d), np.concatenate(rows_t),
+            np.concatenate(rows_v).astype(np.float32),
+            idf=self.vocab.idf, doc_len=doc_len, seg_len=seg_len,
+            n_docs=n_docs, vocab_size=self.vocab.size,
+            functions=self.functions)
+
+    # -- on-the-fly q-d path (the "No Index" baseline) ----------------------
+
+    def make_qd_fn(self):
+        """jit'd (query (Q,), tokens (B,Lp), segs (B,Lp)) -> (B,Q,n_b,n_f).
+
+        This is the query-time interaction-matrix construction that SEINE
+        replaces with an index lookup; both feed the same scorers."""
+        table = self.provider.table()
+        n_b = self.cfg.n_segments
+        functions = self.functions
+        idf = self._idf
+        ip = self.ip
+        provider = self.provider
+
+        def one(query, tok, seg):
+            ctx = provider.contextualize(tok, seg)
+            return doc_interactions(tok, seg, query, table=table, idf=idf,
+                                    ctx_emb=ctx, ip=ip, n_b=n_b,
+                                    functions=functions)
+
+        return jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))

@@ -1,0 +1,124 @@
+"""The segment-level inverted index (§2.3–2.4).
+
+True posting-list layout (CSR over terms), all int32 / static-shape:
+
+  term_offsets (|v|+1,)            posting-list boundaries
+  doc_ids      (nnz,)              docs per term, sorted within each list
+  values       (nnz, n_b, n_f)     atomic interaction rows  M(w, d)
+
+Only pairs with tf(w,d) > sigma_index are stored; lookup of an absent pair
+returns zeros (exactly the sigma=0 semantics). Random access is a fixed
+32-step branchless binary search inside the term's posting range — static
+shapes, vmap-able over (query-term x candidate-doc) batches, shardable, and
+int32-safe at Gov2 scale (4e10 logical pairs; nnz per shard < 2^31).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bisect(doc_ids: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+            target: jnp.ndarray, n_iter: int = 32) -> jnp.ndarray:
+    """First position p in [lo, hi) with doc_ids[p] >= target (branchless)."""
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        v = doc_ids.at[mid].get(mode="clip")
+        go_right = (v < target) & (lo < hi)
+        return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return lo
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SegmentInvertedIndex:
+    term_offsets: jnp.ndarray  # (|v|+1,) int32
+    doc_ids: jnp.ndarray       # (nnz,) int32
+    values: jnp.ndarray        # (nnz, n_b, n_f) float32
+    idf: jnp.ndarray           # (|v|,)
+    doc_len: jnp.ndarray       # (n_docs,) float32
+    seg_len: jnp.ndarray       # (n_docs, n_b) float32 tokens per segment
+    n_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
+    vocab_size: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_b: int = dataclasses.field(metadata=dict(static=True), default=1)
+    functions: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    @property
+    def nnz(self) -> int:
+        return int(self.doc_ids.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in (self.term_offsets, self.doc_ids, self.values,
+                             self.idf, self.doc_len, self.seg_len))
+
+    @property
+    def avg_doc_len(self) -> jnp.ndarray:
+        return jnp.mean(self.doc_len)
+
+    def fn_index(self, name: str) -> int:
+        return self.functions.index(name)
+
+    # -- lookups (Eq. 4) ----------------------------------------------------
+
+    def lookup_positions(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """term_ids (..., Q), doc_ids broadcastable (...,) ->
+        (positions (..., Q), found (..., Q))."""
+        w = term_ids.clip(0)
+        lo = self.term_offsets.at[w].get(mode="clip")
+        hi = self.term_offsets.at[w + 1].get(mode="clip")
+        d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
+        pos = _bisect(self.doc_ids, lo, hi, d)
+        found = (pos < hi) & (self.doc_ids.at[pos].get(mode="clip") == d) \
+            & (term_ids >= 0)
+        return pos, found
+
+    def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
+                     ) -> jnp.ndarray:
+        """(..., Q) term ids x (...,) doc ids -> (..., Q, n_b, n_f).
+        Missing pairs -> zeros."""
+        pos, found = self.lookup_positions(term_ids, doc_ids)
+        vals = self.values.at[pos].get(mode="clip")
+        return vals * found[..., None, None]
+
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
+                  ) -> jnp.ndarray:
+        """Stack rows for the query terms (Eq. 4).
+
+        query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f)."""
+        q = jnp.broadcast_to(query_terms[None],
+                             (doc_ids.shape[0],) + query_terms.shape)
+        return self.lookup_pairs(q, doc_ids)
+
+
+def build_from_rows(doc_ids: np.ndarray, term_ids: np.ndarray,
+                    values: np.ndarray, *, idf: np.ndarray,
+                    doc_len: np.ndarray, seg_len: np.ndarray,
+                    n_docs: int, vocab_size: int,
+                    functions: Tuple[str, ...]) -> SegmentInvertedIndex:
+    """Assemble the index from flat (doc, term, value-row) triples (host)."""
+    order = np.lexsort((doc_ids, term_ids))
+    t = term_ids[order].astype(np.int64)
+    counts = np.bincount(t, minlength=vocab_size)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    n_b = values.shape[1]
+    return SegmentInvertedIndex(
+        term_offsets=jnp.asarray(offsets),
+        doc_ids=jnp.asarray(doc_ids[order].astype(np.int32)),
+        values=jnp.asarray(values[order].astype(np.float32)),
+        idf=jnp.asarray(idf.astype(np.float32)),
+        doc_len=jnp.asarray(doc_len.astype(np.float32)),
+        seg_len=jnp.asarray(seg_len.astype(np.float32)),
+        n_docs=int(n_docs), vocab_size=int(vocab_size), n_b=int(n_b),
+        functions=tuple(functions),
+    )

@@ -1,0 +1,175 @@
+"""The nine atomic interaction functions (§2.3) as one fused device pass.
+
+``doc_interactions`` computes, for one document (its unique terms U x its
+n_b segments), every enabled atomic function value — the same code path is
+used by the index builder (offline) and by the No-Index on-the-fly scorer
+(query time), which is what makes `indexed == on-the-fly` an exact invariant
+for stored pairs.
+
+All shapes static; pad token = -1; pad segment = n_b (trash row, sliced off).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import mlp_apply, mlp_init
+
+FUNCTION_NAMES: Tuple[str, ...] = (
+    "tf", "idf_indicator", "dot", "cosine", "gauss_max",
+    "linear_agg", "max_op", "mlp_emb", "log_cond_prob",
+)
+
+
+def init_interaction_params(key, embed_dim: int) -> Dict[str, Any]:
+    """Learned pieces of atomic functions 6/8 (DeepCT-style a,b and the MLP)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": jax.random.normal(k1, (embed_dim,), jnp.float32) / jnp.sqrt(embed_dim),
+        "b": jnp.zeros(()),
+        "mlp": mlp_init(k2, (embed_dim, 32, 1)),
+    }
+
+
+def doc_interactions(doc_tokens: jnp.ndarray, seg_ids: jnp.ndarray,
+                     uniq_terms: jnp.ndarray, *,
+                     table: jnp.ndarray, idf: jnp.ndarray,
+                     ctx_emb: jnp.ndarray, ip: Dict[str, Any],
+                     n_b: int, functions: Sequence[str] = FUNCTION_NAMES
+                     ) -> jnp.ndarray:
+    """Atomic interaction values for one document.
+
+    doc_tokens: (Lp,) vocab slots, -1 pad. seg_ids: (Lp,) in [0, n_b).
+    uniq_terms: (U,) vocab slots to evaluate (-1 pad) — the doc's unique
+    terms at build time, the query's terms for the on-the-fly path.
+    table: (|v|, De) static embeddings. ctx_emb: (Lp, De) contextual
+    embeddings (provider.contextualize output). Returns (U, n_b, n_f).
+    """
+    Lp = doc_tokens.shape[0]
+    U = uniq_terms.shape[0]
+    De = table.shape[1]
+
+    tok_valid = doc_tokens >= 0
+    term_valid = uniq_terms >= 0
+    seg = jnp.where(tok_valid, seg_ids, n_b)            # trash segment = n_b
+    nseg = n_b + 1
+
+    e_tok = table.at[doc_tokens.clip(0)].get(mode="clip") * tok_valid[:, None]
+    e_term = table.at[uniq_terms.clip(0)].get(mode="clip") * term_valid[:, None]
+
+    # exact-match matrix (U, Lp)
+    match = (uniq_terms[:, None] == doc_tokens[None, :]) \
+        & tok_valid[None, :] & term_valid[:, None]
+    matchf = match.astype(jnp.float32)
+
+    out = []
+    need_tf = any(f in functions for f in ("tf", "idf_indicator"))
+    tf = None
+    if need_tf:
+        tf = jax.vmap(lambda m: jax.ops.segment_sum(m, seg, num_segments=nseg))(
+            matchf)[:, :n_b]                              # (U, n_b)
+
+    for fn in functions:
+        if fn == "tf":
+            out.append(tf)
+        elif fn == "idf_indicator":
+            v = idf.at[uniq_terms.clip(0)].get(mode="clip") * term_valid
+            out.append(v[:, None] * (tf > 0))
+        elif fn == "dot":
+            seg_sum = jax.ops.segment_sum(e_tok, seg, num_segments=nseg)  # (nseg,De)
+            out.append((e_term @ seg_sum[:n_b].T))
+        elif fn == "cosine":
+            nrm = lambda x: x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+            seg_sum = jax.ops.segment_sum(nrm(e_tok) * tok_valid[:, None], seg,
+                                          num_segments=nseg)
+            out.append(nrm(e_term) @ seg_sum[:n_b].T * term_valid[:, None])
+        elif fn == "gauss_max":
+            # max_t exp(-||e_w - e_t||^2) = exp(segment_max(-(d2)))
+            d2 = (jnp.sum(e_term**2, -1)[:, None] + jnp.sum(e_tok**2, -1)[None, :]
+                  - 2.0 * e_term @ e_tok.T)               # (U, Lp)
+            d2 = jnp.where(tok_valid[None, :], d2, jnp.inf)
+            neg = jax.vmap(lambda r: jax.ops.segment_max(
+                -r, seg, num_segments=nseg))(d2)[:, :n_b]
+            out.append(jnp.exp(jnp.where(jnp.isfinite(neg), neg, -jnp.inf)))
+        elif fn == "linear_agg":
+            # a . mean_ctx + b, FACTORED: a.ctx is computed per token first,
+            # so no (U, Lp, De) tensor exists (36 GB -> ~0.3 GB per build
+            # step at production scale; exact same value — §Perf cell C).
+            w = ctx_emb @ ip["a"]                              # (Lp,)
+            onehot = _seg_onehot(seg, nseg)
+            num = matchf @ (onehot * w[:, None])               # (U, nseg)
+            den = matchf @ onehot
+            out.append((num / jnp.maximum(den, 1.0) + ip["b"])[:, :n_b])
+        elif fn == "max_op":
+            # max_t in S of <log(softplus(ctx(t))), e_w>
+            f_ctx = jnp.log(jax.nn.softplus(ctx_emb) + 1e-9)   # (Lp, De)
+            s = e_term @ f_ctx.T                               # (U, Lp)
+            s = jnp.where(tok_valid[None, :], s, -jnp.inf)
+            v = jax.vmap(lambda r: jax.ops.segment_max(
+                r, seg, num_segments=nseg))(s)[:, :n_b]
+            out.append(jnp.where(jnp.isfinite(v), v, 0.0))
+        elif fn == "mlp_emb":
+            # MLP(mean_ctx): the first layer is linear in ctx, so project
+            # tokens FIRST (Lp, K=32), segment-reduce, then the nonlinear
+            # tail — exact, and avoids the (U, Lp, De) tensor (§Perf C).
+            w1, b1 = ip["mlp"]["w"][0], ip["mlp"]["b"][0]
+            ctx_proj = ctx_emb @ w1                            # (Lp, K)
+            onehot = _seg_onehot(seg, nseg)                    # (Lp, nseg)
+            basis = onehot[:, :, None] * ctx_proj[:, None, :]  # (Lp,nseg,K)
+            K = ctx_proj.shape[-1]
+            num = (matchf @ basis.reshape(Lp, nseg * K)).reshape(
+                matchf.shape[0], nseg, K)[:, :n_b]             # one GEMM
+            den = (matchf @ onehot)[:, :n_b, None]
+            h1 = jax.nn.relu(num / jnp.maximum(den, 1.0) + b1)
+            out.append((h1 @ ip["mlp"]["w"][1] + ip["mlp"]["b"][1])[..., 0])
+        elif fn == "log_cond_prob":
+            # segment LM head: log P(w | S) = log softmax(ctx_mean(S) @ table.T)[w]
+            ones = tok_valid.astype(jnp.float32)
+            seg_sum = jax.ops.segment_sum(ctx_emb * ones[:, None], seg, num_segments=nseg)
+            cnt = jax.ops.segment_sum(ones, seg, num_segments=nseg)
+            ctx_mean = seg_sum / jnp.maximum(cnt, 1.0)[:, None]   # (nseg, De)
+            logits = ctx_mean[:n_b] @ table.T                     # (n_b, |v|)
+            logp = logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+            gathered = logp.T.at[uniq_terms.clip(0)].get(mode="clip")  # (U, n_b)
+            out.append(gathered * term_valid[:, None])
+        else:
+            raise ValueError(f"unknown atomic function {fn!r}")
+
+    vals = jnp.stack(out, axis=-1)                        # (U, n_b, n_f)
+    return vals * term_valid[:, None, None]
+
+
+def _seg_onehot(seg: jnp.ndarray, nseg: int) -> jnp.ndarray:
+    """Dense (Lp, nseg) segment indicator — turns segment reductions into
+    GEMMs against the match matrix (MXU-friendly; cf. kernels/seg_interact)."""
+    return jax.nn.one_hot(seg, nseg, dtype=jnp.float32)
+
+
+def _mean_ctx_per_term_seg(matchf: jnp.ndarray, ctx_emb: jnp.ndarray,
+                           seg: jnp.ndarray, nseg: int) -> jnp.ndarray:
+    """Mean contextual embedding of term occurrences per segment.
+
+    matchf: (U, Lp); ctx_emb: (Lp, De) -> (U, nseg, De)."""
+    # weighted = match * ctx -> segment-sum. einsum keeps it one fused op.
+    def per_term(m):
+        num = jax.ops.segment_sum(m[:, None] * ctx_emb, seg, num_segments=nseg)
+        den = jax.ops.segment_sum(m, seg, num_segments=nseg)
+        return num / jnp.maximum(den, 1.0)[:, None]
+    return jax.vmap(per_term)(matchf)
+
+
+def query_doc_interactions(query_terms: jnp.ndarray, doc_tokens: jnp.ndarray,
+                           seg_ids: jnp.ndarray, *, table: jnp.ndarray,
+                           idf: jnp.ndarray, ctx_emb: jnp.ndarray,
+                           ip: Dict[str, Any], n_b: int,
+                           functions: Sequence[str] = FUNCTION_NAMES
+                           ) -> jnp.ndarray:
+    """No-Index on-the-fly path: q-d interaction matrix (Q, n_b, n_f).
+
+    Identical math to the build path (it IS the build path with the query's
+    terms in place of the doc's unique terms)."""
+    return doc_interactions(doc_tokens, seg_ids, query_terms, table=table,
+                            idf=idf, ctx_emb=ctx_emb, ip=ip, n_b=n_b,
+                            functions=functions)

@@ -1,0 +1,118 @@
+"""Embedding providers for SEINE's atomic interaction functions.
+
+The paper uses word2vec (KNRM/HiNT/DeepTileBars) and BERT (DeepCT / functions
+6-9). Offline, no pretrained weights exist; providers are pluggable:
+
+* ``HashProvider``   — deterministic random table (word2vec stand-in).
+* ``LearnedProvider`` — trainable table (updated by the ranker trainer).
+* ``LMProvider``     — contextual embeddings from one of the assigned LM
+  backbones (reduced config on CPU; full config on the pod) — this is how the
+  assigned LM architectures plug into the SEINE indexing phase.
+
+CRITICAL INVARIANT: the same provider instance is used by the index builder
+and by the No-Index on-the-fly path, so `indexed lookup == on-the-fly` holds
+exactly for stored pairs (tested in tests/test_index.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+
+
+class EmbeddingProvider(Protocol):
+    embed_dim: int
+
+    def table(self) -> jnp.ndarray: ...
+    def contextualize(self, tokens: jnp.ndarray, seg_ids: jnp.ndarray) -> jnp.ndarray: ...
+
+
+class HashProvider:
+    """Deterministic static embeddings + a cheap deterministic 'context' mix.
+
+    contextualize(t, seg) = E[t] + alpha * mean_{t' in same segment} E[t'],
+    computable identically at build and query time from the doc alone.
+    """
+
+    def __init__(self, vocab_size: int, embed_dim: int, *, seed: int = 0,
+                 alpha: float = 0.25):
+        self.vocab_size = vocab_size
+        self.embed_dim = embed_dim
+        self.alpha = alpha
+        key = jax.random.key(seed)
+        self._table = jax.random.normal(key, (vocab_size, embed_dim),
+                                        dtype=jnp.float32) / jnp.sqrt(embed_dim)
+
+    def table(self) -> jnp.ndarray:
+        return self._table
+
+    def contextualize(self, tokens: jnp.ndarray, seg_ids: jnp.ndarray) -> jnp.ndarray:
+        """tokens (n,) vocab ids (-1 pad) -> contextual embeddings (n, d)."""
+        valid = tokens >= 0
+        e = self._table.at[tokens.clip(0)].get(mode="clip") * valid[:, None]
+        n_seg = 64  # upper bound on segments per doc (static)
+        seg = jnp.where(valid, seg_ids, n_seg - 1)
+        seg_sum = jax.ops.segment_sum(e, seg, num_segments=n_seg)
+        seg_cnt = jax.ops.segment_sum(valid.astype(jnp.float32), seg, num_segments=n_seg)
+        seg_mean = seg_sum / jnp.maximum(seg_cnt, 1.0)[:, None]
+        return e + self.alpha * seg_mean[seg] * valid[:, None]
+
+
+class LearnedProvider(HashProvider):
+    """Same contextualisation, but the table is a trainable parameter."""
+
+    def __init__(self, table: jnp.ndarray, *, alpha: float = 0.25):
+        self.vocab_size, self.embed_dim = table.shape
+        self.alpha = alpha
+        self._table = table
+
+    def with_table(self, table: jnp.ndarray) -> "LearnedProvider":
+        return LearnedProvider(table, alpha=self.alpha)
+
+
+class LMProvider:
+    """Contextual embeddings from a transformer LM backbone.
+
+    The vocab-level (static) table is the LM's input embedding projected to
+    embed_dim; contextualize() runs the LM over the document tokens and
+    projects the hidden states. This is the SEINE <- assigned-LM-arch bridge.
+    """
+
+    def __init__(self, cfg, params, embed_dim: Optional[int] = None, *,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        d = cfg.d_model
+        self.embed_dim = embed_dim or d
+        key = jax.random.key(seed + 7)
+        self._proj = (jax.random.normal(key, (d, self.embed_dim), jnp.float32)
+                      / jnp.sqrt(d)) if self.embed_dim != d else None
+
+    def _project(self, x):
+        x = x.astype(jnp.float32)
+        return x if self._proj is None else x @ self._proj
+
+    def table(self) -> jnp.ndarray:
+        return self._project(self.params["embed"])
+
+    def contextualize(self, tokens: jnp.ndarray, seg_ids: jnp.ndarray) -> jnp.ndarray:
+        valid = tokens >= 0
+        hidden, _ = T.forward(self.params, tokens.clip(0)[None], self.cfg,
+                              attn_chunk=min(512, max(16, tokens.shape[0])),
+                              remat=False)
+        return self._project(hidden[0]) * valid[:, None]
+
+
+def make_provider(name: str, vocab_size: int, embed_dim: int, *,
+                  seed: int = 0) -> EmbeddingProvider:
+    if name == "hash":
+        return HashProvider(vocab_size, embed_dim, seed=seed)
+    if name == "learned":
+        key = jax.random.key(seed)
+        t = jax.random.normal(key, (vocab_size, embed_dim), jnp.float32) \
+            / jnp.sqrt(embed_dim)
+        return LearnedProvider(t)
+    raise ValueError(f"unknown provider {name!r} (LMProvider is built explicitly)")

@@ -1,0 +1,76 @@
+"""SNRM baseline indexer [Zamani et al., CIKM'18] (§3.1).
+
+Learns a sparse latent representation; the latent nodes act as vocabulary
+entries of an inverted index (they satisfy SEINE's independence condition,
+which is how the paper applies SNRM to KNRM/HiNT/DeepTileBars: documents are
+re-expressed as sequences of latent words).
+
+We implement the encoder as an ngram-window MLP with ReLU sparsity and
+hinge + L1 training (the paper's objective), sized for the synthetic-LETOR
+benchmark. Effectiveness degradation vs SEINE (Table 1's finding) is
+reproduced because lexical identity is lost in the latent space.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_snrm(key, vocab_size: int, d_latent: int = 256,
+              d_emb: int = 64, d_hidden: int = 128) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "emb": dense_init(k1, vocab_size, d_emb),
+        "w1": dense_init(k2, d_emb, d_hidden),
+        "w2": dense_init(k3, d_hidden, d_latent),
+    }
+
+
+def encode(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (.., L) vocab slots (-1 pad) -> sparse latent (.., d_latent)."""
+    valid = (tokens >= 0).astype(jnp.float32)
+    e = p["emb"].at[tokens.clip(0)].get(mode="clip") * valid[..., None]
+    h = jax.nn.relu(e @ p["w1"])
+    z = jax.nn.relu(h @ p["w2"])                      # per-token latent
+    # mean-pool over tokens (ngram pooling simplified to unigram window)
+    return z.sum(-2) / jnp.maximum(valid.sum(-1, keepdims=True), 1.0)
+
+
+def score(p: Params, q_tokens: jnp.ndarray, d_tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(encode(p, q_tokens) * encode(p, d_tokens), axis=-1)
+
+
+def snrm_loss(p: Params, batch: Dict[str, jnp.ndarray],
+              l1: float = 1e-5) -> jnp.ndarray:
+    """Pairwise hinge + L1 sparsity (Zamani et al. Eq. 4)."""
+    sp = score(p, batch["query"], batch["pos"])
+    sn = score(p, batch["query"], batch["neg"])
+    hinge = jnp.maximum(0.0, 1.0 - sp + sn).mean()
+    zq = encode(p, batch["query"])
+    zp = encode(p, batch["pos"])
+    return hinge + l1 * (jnp.abs(zq).sum(-1) + jnp.abs(zp).sum(-1)).mean()
+
+
+def latent_doc_sequences(p: Params, tokens: np.ndarray, top_k: int = 32
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Re-express docs as their top-k active latent 'words' (+ strengths).
+
+    Returns (latent_ids (n_docs, top_k) int32 with -1 pad, strengths)."""
+    z = np.asarray(encode(p, jnp.asarray(tokens)))
+    order = np.argsort(-z, axis=-1)[:, :top_k]
+    strength = np.take_along_axis(z, order, axis=-1)
+    latent_ids = np.where(strength > 0, order, -1).astype(np.int32)
+    return latent_ids, strength.astype(np.float32)
+
+
+def latent_embeddings(p: Params) -> jnp.ndarray:
+    """Embeddings of latent words = decoder rows (w2 columns)."""
+    w = p["w2"].T                                      # (d_latent, d_hidden)
+    return w / jnp.maximum(jnp.linalg.norm(w, axis=-1, keepdims=True), 1e-9)

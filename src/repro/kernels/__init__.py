@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel ships three artifacts: kernel.py (pl.pallas_call + BlockSpec
+VMEM tiling — the TPU target), ops.py (jit'd public wrapper; interpret=True
+on CPU), ref.py (pure-jnp oracle used by tests/benchmarks).
+
+seg_interact — SEINE's v-d cartesian (GEMM + segment-reduce epilogues)
+knrm_pool    — KNRM RBF bank + log pooling (11x HBM-traffic fusion)
+embed_bag    — EmbeddingBag gather-reduce with scalar-prefetch index maps
+flash_attn   — causal GQA FlashAttention forward (online softmax)
+"""
+from .embed_bag.ops import embed_bag, embed_bag_ref
+from .flash_attn.ops import flash_attention, flash_attn_ref
+from .knrm_pool.ops import knrm_pool, knrm_pool_ref
+from .seg_interact.ops import seg_interact, seg_interact_ref
+
+__all__ = ["embed_bag", "embed_bag_ref", "flash_attention", "flash_attn_ref",
+           "knrm_pool", "knrm_pool_ref", "seg_interact", "seg_interact_ref"]

@@ -1,0 +1,35 @@
+"""jit'd wrapper for embed_bag (offsets -> sorted seg ids on the fly)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import default_interpret
+from .kernel import embed_bag_pallas
+from .ref import embed_bag_ref
+
+
+@partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embed_bag(table: jnp.ndarray, indices: jnp.ndarray, offsets: jnp.ndarray,
+              *, n_bags: int, interpret: bool | None = None) -> jnp.ndarray:
+    """EmbeddingBag(sum): table (V,D), indices (nnz,), offsets (B,) -> (B,D).
+
+    Bags are already contiguous (CSR offsets) so seg_ids are sorted by
+    construction — the layout the kernel's revisiting accumulator needs.
+    """
+    interpret = default_interpret(interpret)
+    nnz = indices.shape[0]
+    pos = jnp.arange(nnz)
+    seg = (jnp.searchsorted(offsets, pos, side="right") - 1).astype(jnp.int32)
+    out = embed_bag_pallas(table, indices.astype(jnp.int32), seg, n_bags,
+                           interpret=interpret)
+    # empty bags are never visited by the grid -> their rows are
+    # uninitialised; mask them to the EmbeddingBag zero convention.
+    ends = jnp.concatenate([offsets[1:], jnp.full((1,), nnz, offsets.dtype)])
+    nonempty = (ends - offsets) > 0
+    return jnp.where(nonempty[:, None], out, 0.0)
+
+
+__all__ = ["embed_bag", "embed_bag_ref"]

@@ -1,0 +1,86 @@
+"""Causal GQA FlashAttention forward (Pallas TPU).
+
+Grid: (B, Hq, Sq/bq). Each cell streams KV blocks for its query tile with
+the online-softmax recurrence entirely in VMEM (running max / denom /
+weighted accumulator), so the (Sq x Skv) score matrix never exists in HBM.
+GQA is handled by the kv index map (query head h reads kv head h // G).
+
+Causality is exploited structurally: KV blocks strictly above the diagonal
+are skipped by masking inside the fori_loop (the loop bound is the full KV
+range to keep the HLO static; the masked iterations cost ~0 because the
+whole tile mask is -inf and the accumulator update is a no-op — on TPU the
+win comes from the grid NOT launching those DMAs when block-level
+`when`-guards fire; kept simple here).
+
+VMEM per cell (bq=bk=256, hd<=128, f32): q 128 KiB + k/v 256 KiB + acc
+128 KiB + stats ~2 KiB — comfortably inside 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, skv: int,
+            causal: bool, scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    hd = q.shape[-1]
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+
+    n_kb = skv // bk
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(kb * bk, bk), :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0, pl.dslice(kb * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq,bk)
+        if causal:
+            kv_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= kv_pos, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, block_q: int = 256,
+                      block_k: int = 256, interpret: bool = False
+                      ) -> jnp.ndarray:
+    """q (B, Hq, Sq, hd); k, v (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd)."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, Hq, Sq // block_q)
+    kernel = functools.partial(_kernel, bq=block_q, bk=block_k, skv=Skv,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, hd), lambda b, h, i: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, hd), lambda b, h, i: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""jit'd wrapper for flash_attn (layout adaptation + padding)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import default_interpret
+from .kernel import flash_attn_pallas
+from .ref import flash_attn_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None
+                    ) -> jnp.ndarray:
+    """(B, Sq, Hq, hd) x (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    Model layout (seq, heads) in/out; kernel layout (heads, seq) internally.
+    """
+    interpret = default_interpret(interpret)
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    while Sq % bq:
+        bq //= 2
+    while Skv % bk:
+        bk //= 2
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attn_pallas(qt, kt, vt, causal=causal, block_q=max(bq, 1),
+                            block_k=max(bk, 1), interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention", "flash_attn_ref"]

@@ -1,0 +1,51 @@
+"""knrm_pool Pallas kernel — fused RBF bank + segment pooling + log1p.
+
+Fusion rationale: the naive path writes the (B, Q, n_b, K) kernel tensor to
+HBM (K=11 inflates the interaction matrix 11x) before reducing over n_b.
+Fusing keeps the (bq x n_b x K) tile in VMEM and writes only (B, Q, K) —
+an 11x HBM-traffic cut on the serving hot path.
+
+Grid: (B, Q/bq). Block (bq, n_b) in VMEM; K broadcast in registers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...retrievers.knrm import MUS, SIGMAS
+
+
+def _kernel(cos_ref, mask_ref, out_ref):
+    c = cos_ref[0].astype(jnp.float32)                   # (bq, n_b)
+    m = mask_ref[0].astype(jnp.float32)                  # (1, n_b) -> bcast
+    # regenerate the mu/sigma grids in-kernel (pallas kernels cannot
+    # capture traced constants): mu_0=1.0 sigma_0=1e-3 (exact-match
+    # kernel), mu_k = 1.1-0.2k sigma_k = 0.1 — identical to MUS/SIGMAS.
+    ki = jax.lax.iota(jnp.float32, MUS.shape[0])
+    mus = jnp.where(ki == 0, 1.0, 1.1 - 0.2 * ki)
+    sig = jnp.where(ki == 0, 0.001, 0.1)
+    k = jnp.exp(-0.5 * ((c[..., None] - mus[None, None, :])
+                        / sig[None, None, :]) ** 2)      # (bq, n_b, K)
+    k = k * m[0, None, :, None]
+    out_ref[0] = jnp.log1p(k.sum(axis=-2))               # (bq, K)
+
+
+def knrm_pool_pallas(cos_norm: jnp.ndarray, seg_mask: jnp.ndarray, *,
+                     block_q: int = 128, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """cos_norm (B, Q, n_b), seg_mask (B, n_b) -> (B, Q, K)."""
+    B, Q, n_b = cos_norm.shape
+    K = MUS.shape[0]
+    grid = (B, Q // block_q)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, n_b), lambda b, q: (b, q, 0)),
+            pl.BlockSpec((1, 1, n_b), lambda b, q: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, K), lambda b, q: (b, q, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Q, K), jnp.float32),
+        interpret=interpret,
+    )(cos_norm, seg_mask[:, None, :])

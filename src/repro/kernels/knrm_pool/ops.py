@@ -1,0 +1,27 @@
+"""jit'd wrapper for knrm_pool."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import default_interpret, pad_to
+from .kernel import knrm_pool_pallas
+from .ref import knrm_pool_ref
+
+
+@partial(jax.jit, static_argnames=("block_q", "interpret"))
+def knrm_pool(cos_norm: jnp.ndarray, seg_mask: jnp.ndarray, *,
+              block_q: int = 128, interpret: bool | None = None
+              ) -> jnp.ndarray:
+    interpret = default_interpret(interpret)
+    B, Q, n_b = cos_norm.shape
+    bq = min(block_q, max(8, Q))
+    c = pad_to(cos_norm.astype(jnp.float32), 1, bq)
+    out = knrm_pool_pallas(c, seg_mask.astype(jnp.float32), block_q=bq,
+                           interpret=interpret)
+    return out[:, :Q]
+
+
+__all__ = ["knrm_pool", "knrm_pool_ref"]

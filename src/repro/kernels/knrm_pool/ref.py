@@ -1,0 +1,17 @@
+"""Oracle for knrm_pool: the KNRM RBF kernel bank + log pooling.
+
+in:  cos_norm (B, Q, n_b) match signals in [-1,1], seg_mask (B, n_b)
+out: (B, Q, K) log-pooled soft-TF features (K = 11, the original mu grid).
+Must equal retrievers.knrm.kernel_features (shared constants).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...retrievers.knrm import MUS, SIGMAS
+
+
+def knrm_pool_ref(cos_norm: jnp.ndarray, seg_mask: jnp.ndarray) -> jnp.ndarray:
+    k = jnp.exp(-0.5 * ((cos_norm[..., None] - MUS) / SIGMAS) ** 2)
+    k = k * seg_mask[:, None, :, None]
+    return jnp.log1p(k.sum(axis=-2))

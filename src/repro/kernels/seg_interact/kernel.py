@@ -1,0 +1,74 @@
+"""seg_interact — the SEINE v-d cartesian as a Pallas TPU kernel.
+
+The paper's Spark step `Vocab.cartesian(Segments).map(interaction)`
+materialises here as the PALLAS GRID: grid = (V/bv, S) — every cell is one
+(vocab tile x segment) interaction. Per cell the MXU computes a
+(bv x De) @ (De x Ls) score tile into VMEM, and the epilogue reduces it
+three ways (sum / normalised sum / exp-of-max) WITHOUT ever writing the
+(V x N_tokens) score matrix to HBM — that is the TPU adaptation of the
+paper's insight that atomic interactions decompose per segment.
+
+VMEM budget per cell (defaults bv=256, Ls=256, De<=256, f32):
+  e_vocab tile 256x256x4 = 256 KiB, seg tile 256x256x4 = 256 KiB,
+  scores 256x256x4 = 256 KiB, out 256x3x4 ~ 3 KiB  -> well under 16 MiB.
+MXU alignment: bv, Ls multiples of 128; De padded to 128 by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ev_ref, evn_ref, seg_ref, segn_ref, mask_ref, out_ref):
+    # ev: (bv, De); seg: (Ls, De); mask: (1, Ls); out: (bv, 1, 3)
+    ev = ev_ref[...].astype(jnp.float32)
+    evn = evn_ref[...].astype(jnp.float32)
+    st = seg_ref[0].astype(jnp.float32)                 # (Ls, De)
+    stn = segn_ref[0].astype(jnp.float32)
+    m = mask_ref[0].astype(jnp.float32)                 # (Ls,)
+
+    scores = jax.lax.dot_general(ev, st, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (bv, Ls)
+    dot = (scores * m[None, :]).sum(-1)
+
+    ncos = jax.lax.dot_general(evn, stn, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    cos = (ncos * m[None, :]).sum(-1)
+
+    v2 = (ev * ev).sum(-1)                              # (bv,)
+    t2 = (st * st).sum(-1)                              # (Ls,)
+    d2 = v2[:, None] + t2[None, :] - 2.0 * scores
+    d2 = jnp.where(m[None, :] > 0, d2, jnp.inf)
+    neg = (-d2).max(-1)
+    gauss = jnp.where(jnp.isfinite(neg), jnp.exp(neg), 0.0)
+
+    out_ref[...] = jnp.stack([dot, cos, gauss], axis=-1)[:, None, :]
+
+
+def seg_interact_pallas(e_vocab: jnp.ndarray, e_vocab_n: jnp.ndarray,
+                        seg_tokens: jnp.ndarray, seg_tokens_n: jnp.ndarray,
+                        mask: jnp.ndarray, *, block_v: int = 256,
+                        interpret: bool = False) -> jnp.ndarray:
+    """e_vocab/(normalised) (V, De); seg_tokens/(norm) (S, Ls, De);
+    mask (S, Ls) -> (V, S, 3). V % block_v == 0 (ops.py pads)."""
+    V, De = e_vocab.shape
+    S, Ls, _ = seg_tokens.shape
+    grid = (V // block_v, S)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, De), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_v, De), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, Ls, De), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, Ls, De), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, Ls), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, 1, 3), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((V, S, 3), jnp.float32),
+        interpret=interpret,
+    )(e_vocab, e_vocab_n,
+      seg_tokens, seg_tokens_n, mask)

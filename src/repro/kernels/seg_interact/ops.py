@@ -1,0 +1,45 @@
+"""jit'd public wrapper for seg_interact (padding + interpret fallback)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import default_interpret, pad_to
+from .kernel import seg_interact_pallas
+from .ref import seg_interact_ref
+
+
+def _normalize(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+@partial(jax.jit, static_argnames=("block_v", "interpret"))
+def seg_interact(e_vocab: jnp.ndarray, seg_tokens: jnp.ndarray,
+                 mask: jnp.ndarray, *, block_v: int = 256,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """(V, De) x (S, Ls, De) [+ mask (S, Ls)] -> (V, S, 3) [dot, cos, gauss].
+
+    Pads V to block_v and De to 128 for MXU alignment; zeroes the padded
+    vocab rows out of the result.
+    """
+    interpret = default_interpret(interpret)
+    V, De = e_vocab.shape
+    S, Ls, _ = seg_tokens.shape
+    ev = pad_to(e_vocab.astype(jnp.float32), 0, block_v)
+    Vp = ev.shape[0]
+    de_pad = (-De) % 128
+    if de_pad:
+        ev = jnp.pad(ev, ((0, 0), (0, de_pad)))
+        seg_tokens = jnp.pad(seg_tokens.astype(jnp.float32),
+                             ((0, 0), (0, 0), (0, de_pad)))
+    st = seg_tokens.astype(jnp.float32) * mask[..., None]
+    # pre-normalise (zero rows stay zero -> masked anyway)
+    out = seg_interact_pallas(ev, _normalize(ev), st, _normalize(st),
+                              mask.astype(jnp.float32), block_v=block_v,
+                              interpret=interpret)
+    return out[:V]
+
+
+__all__ = ["seg_interact", "seg_interact_ref"]

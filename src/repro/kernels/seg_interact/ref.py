@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the seg_interact kernel.
+
+Computes, for every (vocab term, segment) pair:
+  dot   = sum_{t in S} E(w) . E(t)
+  cos   = sum_{t in S} cos(E(w), E(t))
+  gauss = max_{t in S} exp(-||E(w) - E(t)||^2)
+Input layout: segments pre-padded to a fixed length Ls —
+  seg_tokens (S, Ls, De) with mask (S, Ls).
+Output (V, S, 3). Empty segments -> 0 for all three.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seg_interact_ref(e_vocab: jnp.ndarray, seg_tokens: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    ev = e_vocab.astype(jnp.float32)                    # (V, De)
+    st = seg_tokens.astype(jnp.float32)                 # (S, Ls, De)
+    m = mask.astype(jnp.float32)                        # (S, Ls)
+
+    scores = jnp.einsum("vd,sld->vsl", ev, st)          # (V, S, Ls)
+    dot = (scores * m[None]).sum(-1)
+
+    nv = ev / jnp.maximum(jnp.linalg.norm(ev, axis=-1, keepdims=True), 1e-9)
+    nt = st / jnp.maximum(jnp.linalg.norm(st, axis=-1, keepdims=True), 1e-9)
+    cos = (jnp.einsum("vd,sld->vsl", nv, nt) * m[None]).sum(-1)
+
+    d2 = (jnp.sum(ev**2, -1)[:, None, None] + jnp.sum(st**2, -1)[None]
+          - 2.0 * scores)                               # (V, S, Ls)
+    d2 = jnp.where(m[None] > 0, d2, jnp.inf)
+    neg = (-d2).max(-1)                                 # (V, S)
+    gauss = jnp.where(jnp.isfinite(neg), jnp.exp(neg), 0.0)
+
+    return jnp.stack([dot, cos, gauss], axis=-1)

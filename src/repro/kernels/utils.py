@@ -1,0 +1,22 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret(interpret) -> bool:
+    """Pallas TPU kernels run in interpret mode on CPU (this container)."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape)
+cell on the production meshes and extract memory / cost / collective
+evidence for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    ... --mesh multi      # (2,16,16) pod x data x model
+    ... --components      # also lower roofline components (scan correction)
+
+Writes one JSON per (cell x mesh) into --out (default dryrun_results/).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from .mesh import make_production_mesh
+from .roofline import model_flops, terms_from_compiled
+from .steps import all_cell_ids, build_cell
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, *,
+             components: bool = True, verbose: bool = True,
+             strategy: str = "tp2d") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        cell = build_cell(arch_id, shape_name, mesh, strategy=strategy)
+        # NOTE: donation is deliberately NOT applied here — the CPU backend
+        # does not implement buffer donation, so donated params/opt-state
+        # get double-counted in memory_analysis (observed +2x on MoE
+        # cells). The real train loop donates (train/loop.py); on TPU the
+        # peak is therefore <= what we report.
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        terms = terms_from_compiled(compiled)
+        comp_info = []
+        if components:
+            for c in cell.components:
+                cj = jax.jit(c.fn, in_shardings=c.in_shardings)
+                cc = cj.lower(*c.args).compile()
+                ct = terms_from_compiled(cc)
+                comp_info.append({"name": c.name, "multiplier": c.multiplier,
+                                  **ct.as_dict()})
+                terms = terms.add(ct, k=c.multiplier)
+
+    mf = model_flops(cell.meta, cell.kind)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(n_dev), "kind": cell.kind, "step": cell.step_name,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "peak_gib_per_device": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 2**30, 3),
+        },
+        "roofline": terms.as_dict(),
+        "components": comp_info,
+        "meta": cell.meta,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (terms.flops * n_dev)
+                               if mf and terms.flops else None),
+    }
+    if verbose:
+        print(f"[dryrun] {arch_id}/{shape_name}/{mesh_name}: "
+              f"compile {t_compile:.1f}s, "
+              f"peak {rec['memory']['peak_gib_per_device']} GiB/dev, "
+              f"bottleneck {terms.bottleneck} "
+              f"(c={terms.t_compute:.3e}s m={terms.t_memory:.3e}s "
+              f"x={terms.t_collective:.3e}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-components", action="store_true")
+    ap.add_argument("--no-seine", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--strategy", default="tp2d", choices=["tp2d", "fsdp"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = all_cell_ids(include_seine=not args.no_seine)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch_id, shape_name in cells:
+        for mesh_name in meshes:
+            suffix = "" if args.strategy == "tp2d" else f"__{args.strategy}"
+            out_path = os.path.join(
+                args.out,
+                f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+            if os.path.exists(out_path):
+                print(f"[dryrun] skip (exists): {out_path}", flush=True)
+                continue
+            try:
+                rec = run_cell(arch_id, shape_name, mesh_name,
+                               components=not args.no_components,
+                               strategy=args.strategy)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                print(f"[dryrun] FAIL {arch_id}/{shape_name}/{mesh_name}: "
+                      f"{type(e).__name__}: {e}", flush=True)
+                with open(out_path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

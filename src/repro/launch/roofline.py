@@ -1,0 +1,133 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. `compiled.cost_analysis()` on an SPMD module reports PER-DEVICE flops
+and bytes (validated in EXPERIMENTS.md §Dry-run against the analytic
+global count / n_chips). XLA counts a `while`(scan) body ONCE, so totals
+are reconstructed compositionally:
+
+    total = cost(full module) + sum_c multiplier_c * cost(component_c)
+
+where components are the scan bodies (transformer layer, CE chunk) lowered
+as standalone modules with the same shardings (launch/steps.py). The same
+correction applies to collective bytes, parsed from `compiled.as_text()`
+by summing result-shape bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<ty>\([^)]*\)|[\w\[\],{}:#\s()]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device result bytes of collective ops, by op kind."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue  # count start/plain once; done carries the same buffer
+        ty = m.group("ty")
+        n = 0.0
+        for dt, dims in _SHAPE_RE.findall(ty):
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            n += size * _DTYPE_BYTES[dt]
+        op = m.group("op")
+        out[op] = out.get(op, 0.0) + n
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float = 0.0            # per-device
+    hbm_bytes: float = 0.0        # per-device
+    coll_bytes: float = 0.0       # per-device
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time (perfect overlap of the three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def add(self, other: "RooflineTerms", k: float = 1.0) -> "RooflineTerms":
+        merged = dict(self.coll_by_op)
+        for op, v in other.coll_by_op.items():
+            merged[op] = merged.get(op, 0.0) + k * v
+        return RooflineTerms(
+            flops=self.flops + k * other.flops,
+            hbm_bytes=self.hbm_bytes + k * other.hbm_bytes,
+            coll_bytes=self.coll_bytes + k * other.coll_bytes,
+            coll_by_op=merged)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_by_op": self.coll_by_op,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+        }
+
+
+def terms_from_compiled(compiled) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=coll["total"], coll_by_op=coll)
+
+
+def model_flops(meta: Dict[str, Any], kind: str) -> Optional[float]:
+    """MODEL_FLOPS: 6*N*D for dense training, 2*N*D inference (global)."""
+    n = meta.get("n_active_params")
+    tokens = meta.get("tokens")
+    if not n or not tokens:
+        return None
+    mult = 6.0 if kind == "training" else 2.0
+    return mult * n * tokens

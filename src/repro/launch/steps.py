@@ -1,0 +1,592 @@
+"""Dry-run cells: step fn + ShapeDtypeStruct inputs + shardings per
+(architecture x input shape), for every one of the 40 assigned cells
+(+ 2 SEINE-system cells).
+
+Everything here is allocation-free: parameters come from jax.eval_shape,
+batches are ShapeDtypeStructs (the shannon/kernels pattern), so lowering a
+9B-param cell on a 512-device host mesh costs only compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_bundle
+from ..configs.base import ShapeConfig, TransformerConfig
+from ..data.graph import subgraph_shape
+from ..dist.sharding import (data_axes, gnn_param_rules, lm_cache_spec,
+                             lm_param_rules, lm_param_rules_fsdp,
+                             opt_state_shardings, recsys_param_rules,
+                             tree_shardings)
+from ..models import mace as MA
+from ..models import recsys as R
+from ..models import transformer as T
+from ..train.optimizer import adam, apply_updates, clip_by_global_norm
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class Component:
+    """One additively-counted piece of the roofline decomposition."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Any
+    multiplier: int = 1
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step_name: str                      # train_step | serve_step
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Any
+    donate: Tuple[int, ...] = ()
+    components: List[Component] = field(default_factory=list)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ===========================================================================
+# LM cells
+# ===========================================================================
+
+def _lm_train_cell(cfg: TransformerConfig, shape: ShapeConfig, mesh: Mesh,
+                   *, attn_chunk: int = 1024,
+                   accum: Optional[int] = None,
+                   strategy: str = "tp2d") -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    da = data_axes(mesh)
+    seq_axis = None
+    if strategy == "fsdp":
+        # FSDP shards the batch over the flat grid; when the grid exceeds
+        # the global batch (multi-pod: 512 > 256) the pod axis moves to the
+        # SEQUENCE dim instead (SP x FSDP hybrid).
+        if B % int(np.prod([mesh.shape[a] for a in da + ("model",)])):
+            seq_axis = "pod" if "pod" in mesh.axis_names else None
+            da = tuple(a for a in da if a != "pod") + ("model",)
+        else:
+            da = da + ("model",)
+    n_data = int(np.prod([mesh.shape[a] for a in da]))
+    # microbatching (grad accumulation): cap per-device live tokens so the
+    # activation working set fits 16 GiB HBM; accum is a config knob.
+    if accum is None:
+        accum = 1
+        while (B // (accum * 2)) >= n_data \
+                and (B // (accum * 2)) % n_data == 0 \
+                and (B // accum) * S // n_data > 16384:
+            accum *= 2
+    mb = B // accum
+    ce_chunks = max(8, S // 256)
+    opt = adam(3e-4)
+
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    rules = lm_param_rules_fsdp() if strategy == "fsdp" else lm_param_rules()
+    pshard = tree_shardings(mesh, params_s, rules)
+    oshard = opt_state_shardings(mesh, opt_s, pshard)
+    batch_s = {"tokens": SDS((accum, mb, S), jnp.int32),
+               "labels": SDS((accum, mb, S), jnp.int32)}
+    bshard = {k: _ns(mesh, P(None, da, seq_axis)) for k in batch_s}
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, batch, cfg, attn_chunk=attn_chunk,
+                         ce_chunks=ce_chunks, remat=True, scan_layers=True,
+                         gather_layer_weights=(strategy == "fsdp"))
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            mbatch = jax.tree.map(lambda a: a[0], batch)
+            loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+        else:
+            def micro(carry, mbatch):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (tot + l, jax.tree.map(jnp.add, g, gi)), None
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), batch)
+            inv = 1.0 / accum
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    # --- roofline components -------------------------------------------
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    lp_s = jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype),
+                        params_s["layers"])
+    # strip the leading (stacked-layer) axis off the param specs
+    lp_shard = jax.tree.map(lambda s: _ns(mesh, P(*s.spec[1:])),
+                            pshard["layers"])
+    x_s = SDS((mb, S, cfg.d_model), dt)
+    x_shard = _ns(mesh, P(da, None, None))
+
+    def layer_fwd_bwd(lp, x):
+        def f(lp, x):
+            if strategy == "fsdp":   # mirror the in-body weight gather
+                from ..models.layers import maybe_replicate
+                lp = {k: (v if k.startswith("we_")
+                          else jax.tree.map(maybe_replicate, v))
+                      for k, v in lp.items()}
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (mb, S))
+            y, aux = T.block(x, lp, cfg, positions=pos, attn_chunk=attn_chunk,
+                             moe_batch_axes=("__all__" if strategy == "fsdp"
+                                             else "__data__"))
+            return (y.astype(jnp.float32).mean() + aux)
+        g = jax.grad(f, argnums=(0, 1))(lp, x)
+        return jax.tree.map(lambda a: a.astype(jnp.float32).mean(), g)
+
+    unemb_s = params_s["embed"] if cfg.tie_embeddings else params_s["unembed"]
+    unemb_shard = pshard["embed"] if cfg.tie_embeddings else pshard["unembed"]
+    hc_s = SDS((mb, S // ce_chunks, cfg.d_model), dt)
+    lab_s = SDS((mb, S // ce_chunks), jnp.int32)
+
+    def ce_chunk_fwd_bwd(unemb, h, lab):
+        def f(unemb, h):
+            logits = jax.lax.dot_general(
+                h, unemb, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lab.clip(0)[..., None],
+                                       axis=-1)[..., 0]
+            return (lse - gold).mean()
+        g = jax.grad(f, argnums=(0, 1))(unemb, h)
+        return jax.tree.map(lambda a: a.astype(jnp.float32).mean(), g)
+
+    # the full module counts each nested scan body once; see roofline.py
+    comps = [
+        Component("layer_fwd_bwd", layer_fwd_bwd, (lp_s, x_s),
+                  (lp_shard, x_shard),
+                  multiplier=accum * cfg.n_layers - 1),
+        Component("ce_chunk_fwd_bwd", ce_chunk_fwd_bwd,
+                  (SDS(unemb_s.shape, unemb_s.dtype), hc_s, lab_s),
+                  (unemb_shard, _ns(mesh, P(da, None, None)),
+                   _ns(mesh, P(da, None))),
+                  multiplier=accum * ce_chunks - 1),
+    ]
+
+    return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                step_name="train_step", fn=train_step,
+                args=(params_s, opt_s, batch_s),
+                in_shardings=(pshard, oshard, bshard), donate=(0, 1),
+                components=comps,
+                meta={"n_layers": cfg.n_layers, "ce_chunks": ce_chunks,
+                      "accum": accum, "microbatch": mb,
+                      "strategy": strategy,
+                      "tokens": B * S,
+                      "n_params": cfg.n_params,
+                      "n_active_params": cfg.n_active_params})
+
+
+def _lm_prefill_cell(cfg: TransformerConfig, shape: ShapeConfig, mesh: Mesh
+                     ) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    da = data_axes(mesh)
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+    pshard = tree_shardings(mesh, params_s, lm_param_rules())
+    tok_s = SDS((B, S), jnp.int32)
+
+    def serve_step(params, tokens):
+        return T.prefill(params, tokens, cfg, attn_chunk=1024)
+
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    lp_s = jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype), params_s["layers"])
+    lp_shard = jax.tree.map(lambda s: _ns(mesh, P(*s.spec[1:])),
+                            tree_shardings(mesh, params_s,
+                                           lm_param_rules())["layers"])
+    x_s = SDS((B, S, cfg.d_model), dt)
+
+    def layer_fwd(lp, x):
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y, _ = T.block(x, lp, cfg, positions=pos, attn_chunk=1024)
+        return y.astype(jnp.float32).mean()
+
+    comps = [Component("layer_fwd", layer_fwd, (lp_s, x_s),
+                       (lp_shard, _ns(mesh, P(da, None, None))),
+                       multiplier=cfg.n_layers - 1)]
+    return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                step_name="serve_step", fn=serve_step, args=(params_s, tok_s),
+                in_shardings=(pshard, _ns(mesh, P(da, None))),
+                components=comps,
+                meta={"n_layers": cfg.n_layers, "tokens": B * S,
+                      "n_params": cfg.n_params,
+                      "n_active_params": cfg.n_active_params})
+
+
+def _lm_decode_cell(cfg: TransformerConfig, shape: ShapeConfig, mesh: Mesh
+                    ) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    da = data_axes(mesh)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params_s = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+    pshard = tree_shardings(mesh, params_s, lm_param_rules())
+    cache_sh = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+    cache_s = T.KVCache(SDS(cache_sh, dt), SDS(cache_sh, dt),
+                        SDS((B,), jnp.int32))
+    cspec = lm_cache_spec(mesh, seq_shard=True, batch=B)
+    cache_shard = T.KVCache(_ns(mesh, cspec), _ns(mesh, cspec), _rep(mesh))
+    tok_s = SDS((B,), jnp.int32)
+    tok_shard = _ns(mesh, P(da)) if B > 1 else _rep(mesh)
+
+    def serve_step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg)
+
+    # per-layer decode component
+    lp_s = jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype), params_s["layers"])
+    lp_shard = jax.tree.map(lambda s: _ns(mesh, P(*s.spec[1:])),
+                            tree_shardings(mesh, params_s,
+                                           lm_param_rules())["layers"])
+    kc_s = SDS(cache_sh[1:], dt)
+    kc_shard = _ns(mesh, P(*cspec[1:]))
+    x_s = SDS((B, 1, cfg.d_model), dt)
+
+    def decode_layer(lp, kc, vc, x):
+        from ..models.layers import apply_rope, gqa_attention, rms_norm
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,dk->bsk", h, lp["wq"]).reshape(B, 1, Hq, hd)
+        o = gqa_attention(q, kc, vc, causal=False, chunk=min(S, 4096),
+                          kv_valid_len=jnp.full((B,), S, jnp.int32))
+        x = x + jnp.einsum("bsk,kd->bsd", o.reshape(B, 1, Hq * hd), lp["wo"])
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = T.dense_ffn(h2, lp)
+        else:
+            y, _ = T.moe_ffn(h2, lp, cfg)
+        return (x + y).astype(jnp.float32).mean()
+
+    comps = [Component("decode_layer", decode_layer,
+                       (lp_s, kc_s, kc_s, x_s),
+                       (lp_shard, kc_shard, kc_shard,
+                        _ns(mesh, P(da, None, None)) if B > 1 else _rep(mesh)),
+                       multiplier=cfg.n_layers - 1)]
+    return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                step_name="serve_step", fn=serve_step,
+                args=(params_s, cache_s, tok_s),
+                in_shardings=(pshard, cache_shard, tok_shard), donate=(1,),
+                components=comps,
+                meta={"n_layers": cfg.n_layers, "tokens": B,
+                      "kv_len": S, "n_params": cfg.n_params,
+                      "n_active_params": cfg.n_active_params})
+
+
+# ===========================================================================
+# GNN (MACE) cells
+# ===========================================================================
+
+def _mace_cell(cfg, shape: ShapeConfig, mesh: Mesh) -> Cell:
+    da = data_axes(mesh)
+    if shape.name == "minibatch_lg":
+        N, E = subgraph_shape(shape.batch_nodes, shape.fanout)
+        n_graphs = 1
+    elif shape.name == "molecule":
+        N, E = shape.n_nodes * shape.n_graphs, shape.n_edges * shape.n_graphs
+        n_graphs = shape.n_graphs
+    else:
+        N, E = shape.n_nodes, shape.n_edges
+        n_graphs = 1
+    # pad node/edge counts to the mesh tile (padding edges are self-loops,
+    # masked by the model's degenerate-edge guard; padding nodes carry zero
+    # force targets). Original sizes recorded in meta.
+    N0, E0 = N, E
+    N = -(-N // 512) * 512
+    E = -(-E // 512) * 512
+
+    opt = adam(1e-3)
+    params_s = jax.eval_shape(lambda: MA.init_params(cfg, jax.random.key(0)))
+    opt_s = jax.eval_shape(opt.init, params_s)
+    pshard = tree_shardings(mesh, params_s, gnn_param_rules())
+    oshard = opt_state_shardings(mesh, opt_s, pshard)
+
+    # nodes/edges shard over the WHOLE mesh (GNN params replicated -> the
+    # model axis is free batch parallelism)
+    allax = da + ("model",)
+    batch_s = {
+        "species": SDS((N,), jnp.int32),
+        "positions": SDS((N, 3), jnp.float32),
+        "senders": SDS((E,), jnp.int32),
+        "receivers": SDS((E,), jnp.int32),
+        "graph_idx": SDS((N,), jnp.int32),
+        "energy": SDS((n_graphs,), jnp.float32),
+        "forces": SDS((N, 3), jnp.float32),
+    }
+    bshard = {
+        "species": _ns(mesh, P(allax)), "positions": _ns(mesh, P(allax, None)),
+        "senders": _ns(mesh, P(allax)), "receivers": _ns(mesh, P(allax)),
+        "graph_idx": _ns(mesh, P(allax)),
+        "energy": _rep(mesh), "forces": _ns(mesh, P(allax, None)),
+    }
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p, b: MA.mace_loss(p, cfg, b, n_graphs=n_graphs))(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, {"loss": loss}
+
+    return Cell(arch_id="mace", shape_name=shape.name, kind=shape.kind,
+                step_name="train_step", fn=train_step,
+                args=(params_s, opt_s, batch_s),
+                in_shardings=(pshard, oshard, bshard), donate=(0, 1),
+                meta={"n_nodes": N, "n_edges": E, "n_graphs": n_graphs,
+                      "n_nodes_unpadded": N0, "n_edges_unpadded": E0})
+
+
+# ===========================================================================
+# recsys cells
+# ===========================================================================
+
+def _recsys_cell(cfg, shape: ShapeConfig, mesh: Mesh) -> Cell:
+    da = data_axes(mesh)
+    fam = cfg.family
+    opt = adam(1e-3)
+
+    if fam == "attn-ctr":
+        init = lambda: R.autoint_init(cfg, jax.random.key(0))
+        fwd = lambda p, b: R.autoint_forward(p, cfg, b["sparse_ids"])
+    elif fam == "dlrm":
+        init = lambda: R.dlrm_init(cfg, jax.random.key(0))
+        fwd = lambda p, b: R.dlrm_forward(p, cfg, b["dense"], b["sparse_ids"])
+    else:
+        init = lambda: R.seqrec_init(cfg, jax.random.key(0))
+        fwd = None
+
+    params_s = jax.eval_shape(init)
+    pshard = tree_shardings(mesh, params_s, recsys_param_rules())
+
+    def ctr_batch_specs(B):
+        b = {"sparse_ids": SDS((B, cfg.n_sparse), jnp.int32),
+             "label": SDS((B,), jnp.float32)}
+        s = {"sparse_ids": _ns(mesh, P(da, None)), "label": _ns(mesh, P(da))}
+        if fam == "dlrm":
+            b["sparse_ids"] = SDS((B, cfg.n_sparse), jnp.int32)
+            b["dense"] = SDS((B, cfg.n_dense), jnp.float32)
+            s["dense"] = _ns(mesh, P(da, None))
+        return b, s
+
+    if shape.kind == "training":
+        B = shape.batch
+        opt_s = jax.eval_shape(opt.init, params_s)
+        oshard = opt_state_shardings(mesh, opt_s, pshard)
+        if fam in ("attn-ctr", "dlrm"):
+            batch_s, bshard = ctr_batch_specs(B)
+
+            def loss_fn(p, b):
+                return R.bce_loss(fwd(p, b), b["label"])
+        else:
+            S = cfg.seq_len
+            if cfg.causal:
+                batch_s = {"items": SDS((B, S), jnp.int32),
+                           "pos": SDS((B, S), jnp.int32),
+                           "neg": SDS((B, S), jnp.int32),
+                           "mask": SDS((B, S), jnp.float32)}
+                loss_fn = lambda p, b: R.sasrec_loss(p, cfg, b)
+            else:
+                batch_s = {"items": SDS((B, S), jnp.int32),
+                           "labels": SDS((B, S), jnp.int32),
+                           "negatives": SDS((128,), jnp.int32)}
+                loss_fn = lambda p, b: R.bert4rec_loss(p, cfg, b)
+            bshard = {k: (_ns(mesh, P(da, None)) if v.ndim == 2 else _rep(mesh))
+                      for k, v in batch_s.items()}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, {"loss": loss}
+
+        return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                    step_name="train_step", fn=train_step,
+                    args=(params_s, opt_s, batch_s),
+                    in_shardings=(pshard, oshard, bshard), donate=(0, 1),
+                    meta={"batch": B})
+
+    if shape.kind in ("online-inference", "offline-scoring"):
+        B = shape.batch
+        if fam in ("attn-ctr", "dlrm"):
+            batch_s, bshard = ctr_batch_specs(B)
+            batch_s.pop("label"), bshard.pop("label")
+
+            def serve_step(params, batch):
+                return jax.nn.sigmoid(fwd(params, batch))
+        else:
+            S = cfg.seq_len
+            batch_s = {"items": SDS((B, S), jnp.int32),
+                       "target": SDS((B,), jnp.int32)}
+            bshard = {"items": _ns(mesh, P(da, None)), "target": _ns(mesh, P(da))}
+
+            def serve_step(params, batch):
+                return R.seqrec_pair_scores(params, cfg, batch["items"],
+                                            batch["target"])
+        return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                    step_name="serve_step", fn=serve_step,
+                    args=(params_s, batch_s), in_shardings=(pshard, bshard),
+                    meta={"batch": B})
+
+    # retrieval-scoring: 1 context x n_candidates
+    C = shape.n_candidates
+    if fam in ("attn-ctr", "dlrm"):
+        batch_s = {"sparse_ids": SDS((1, cfg.n_sparse), jnp.int32),
+                   "cand_ids": SDS((C,), jnp.int32)}
+        bshard = {"sparse_ids": _rep(mesh), "cand_ids": _ns(mesh, P(da))}
+        if fam == "dlrm":
+            batch_s["dense"] = SDS((1, cfg.n_dense), jnp.float32)
+            bshard["dense"] = _rep(mesh)
+
+        def serve_step(params, batch):
+            ids = jnp.broadcast_to(batch["sparse_ids"], (C, cfg.n_sparse))
+            ids = ids.at[:, 0].set(batch["cand_ids"])   # vary the item field
+            b = {"sparse_ids": ids}
+            if fam == "dlrm":
+                b["dense"] = jnp.broadcast_to(batch["dense"], (C, cfg.n_dense))
+            return jax.nn.sigmoid(fwd(params, b))
+    else:
+        batch_s = {"items": SDS((1, cfg.seq_len), jnp.int32),
+                   "cand_ids": SDS((C,), jnp.int32)}
+        bshard = {"items": _rep(mesh), "cand_ids": _ns(mesh, P(da))}
+
+        def serve_step(params, batch):
+            h = R.seqrec_encode(params, cfg, batch["items"])[:, -1]
+            return R.seqrec_score_items(params, h, batch["cand_ids"])[0]
+
+    return Cell(arch_id=cfg.name, shape_name=shape.name, kind=shape.kind,
+                step_name="serve_step", fn=serve_step,
+                args=(params_s, batch_s), in_shardings=(pshard, bshard),
+                meta={"n_candidates": C})
+
+
+# ===========================================================================
+# SEINE system cells (the paper's own workload at production scale)
+# ===========================================================================
+
+def _seine_cells(mesh: Mesh) -> List[Cell]:
+    from ..core.interactions import FUNCTION_NAMES
+    da = data_axes(mesh)
+    V, De, n_b, Lp, U = 40960, 128, 20, 1024, 512
+    B_docs = 1024                      # docs per build step (whole corpus
+    #                                    streams through in B_docs batches)
+    table_s = SDS((V, De), jnp.float32)
+    idf_s = SDS((V,), jnp.float32)
+
+    from ..core.interactions import doc_interactions, init_interaction_params
+    ip_s = jax.eval_shape(lambda: init_interaction_params(jax.random.key(0), De))
+
+    def build_step(table, idf, ip, tokens, segs, uniq):
+        def one(tok, seg, u):
+            valid = tok >= 0
+            e = table.at[tok.clip(0)].get(mode="clip") * valid[:, None]
+            seg_c = jnp.where(valid, seg, 64 - 1)
+            ssum = jax.ops.segment_sum(e, seg_c, num_segments=64)
+            cnt = jax.ops.segment_sum(valid.astype(jnp.float32), seg_c,
+                                      num_segments=64)
+            ctx = e + 0.25 * (ssum / jnp.maximum(cnt, 1.0)[:, None])[seg_c] \
+                * valid[:, None]
+            return doc_interactions(tok, seg, u, table=table, idf=idf,
+                                    ctx_emb=ctx, ip=ip, n_b=n_b,
+                                    functions=FUNCTION_NAMES)
+        return jax.vmap(one)(tokens, segs, uniq)
+
+    build_args = (table_s, idf_s, ip_s,
+                  SDS((B_docs, Lp), jnp.int32), SDS((B_docs, Lp), jnp.int32),
+                  SDS((B_docs, U), jnp.int32))
+    build_shard = (_ns(mesh, P("model", None)), _ns(mesh, P("model")),
+                   jax.tree.map(lambda _: _rep(mesh), ip_s),
+                   _ns(mesh, P(da, None)), _ns(mesh, P(da, None)),
+                   _ns(mesh, P(da, None)))
+    build = Cell(arch_id="seine", shape_name="index_build", kind="indexing",
+                 step_name="build_step", fn=build_step, args=build_args,
+                 in_shardings=build_shard,
+                 meta={"docs_per_step": B_docs, "vocab": V, "n_b": n_b})
+
+    # retrieval: batched KNRM scoring over indexed candidates
+    from ..core.index import SegmentInvertedIndex
+    from ..retrievers import get_retriever
+    from ..serving.engine import make_qmeta
+    nnz, n_docs, Q, B_cand = 200_000_000, 2_000_000, 8, 16384
+    n_f = len(FUNCTION_NAMES)
+    idx_s = SegmentInvertedIndex(
+        term_offsets=SDS((V + 1,), jnp.int32),
+        doc_ids=SDS((nnz,), jnp.int32),
+        values=SDS((nnz, n_b, n_f), jnp.float32),
+        idf=idf_s, doc_len=SDS((n_docs,), jnp.float32),
+        seg_len=SDS((n_docs, n_b), jnp.float32),
+        n_docs=n_docs, vocab_size=V, n_b=n_b, functions=FUNCTION_NAMES)
+    idx_shard = SegmentInvertedIndex(
+        term_offsets=_rep(mesh), doc_ids=_rep(mesh),
+        values=_ns(mesh, P("model", None, None)),
+        idf=_rep(mesh), doc_len=_rep(mesh), seg_len=_rep(mesh),
+        n_docs=n_docs, vocab_size=V, n_b=n_b, functions=FUNCTION_NAMES)
+    spec = get_retriever("knrm")
+    kparams_s = jax.eval_shape(
+        lambda: spec.init(jax.random.key(0), n_b, FUNCTION_NAMES))
+
+    def retrieve_step(index, kparams, query, cands):
+        m = index.qd_matrix(query, cands)
+        meta = make_qmeta(index, query, cands)
+        return spec.score(kparams, m, meta, index.functions)
+
+    retrieve = Cell(
+        arch_id="seine", shape_name="retrieve", kind="retrieval-scoring",
+        step_name="serve_step", fn=retrieve_step,
+        args=(idx_s, kparams_s, SDS((Q,), jnp.int32),
+              SDS((B_cand,), jnp.int32)),
+        in_shardings=(idx_shard, jax.tree.map(lambda _: _rep(mesh), kparams_s),
+                      _rep(mesh), _ns(mesh, P(da))),
+        meta={"nnz": nnz, "candidates": B_cand})
+    return [build, retrieve]
+
+
+# ===========================================================================
+# dispatch
+# ===========================================================================
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               strategy: str = "tp2d") -> Cell:
+    if arch_id == "seine":
+        for c in _seine_cells(mesh):
+            if c.shape_name == shape_name:
+                return c
+        raise KeyError(shape_name)
+    b = get_bundle(arch_id)
+    shape = b.shape(shape_name)
+    if b.domain == "lm":
+        if shape.kind == "training":
+            return _lm_train_cell(b.config, shape, mesh, strategy=strategy)
+        if shape.kind == "inference-prefill":
+            return _lm_prefill_cell(b.config, shape, mesh)
+        return _lm_decode_cell(b.config, shape, mesh)
+    if b.domain == "gnn":
+        return _mace_cell(b.config, shape, mesh)
+    if b.domain == "recsys":
+        return _recsys_cell(b.config, shape, mesh)
+    raise ValueError(b.domain)
+
+
+def all_cell_ids(include_seine: bool = True) -> List[Tuple[str, str]]:
+    from ..configs import all_cells
+    cells = list(all_cells())
+    if include_seine:
+        cells += [("seine", "index_build"), ("seine", "retrieve")]
+    return cells

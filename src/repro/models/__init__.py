@@ -1,0 +1,1 @@
+from . import embedding_bag, layers, mace, recsys, transformer  # noqa: F401

@@ -1,0 +1,203 @@
+"""MACE — higher-order equivariant message passing [arXiv:2206.07697].
+
+TPU-native adaptation (noted in DESIGN.md): the spherical-irrep tensor
+products are implemented in the **Cartesian basis** (scalar / vector /
+symmetric-traceless rank-2, i.e. l = 0,1,2 = the assigned l_max) so every
+Clebsch-Gordan contraction is a plain einsum — manifestly E(3)-equivariant
+and MXU-friendly, with no e3nn dependency. The ACE product basis is built by
+successive contractions up to the assigned correlation order (3).
+
+Message passing uses edge-index gather + ``jax.ops.segment_sum`` — the JAX
+message-passing primitive (no sparse formats needed).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MACEConfig
+from .layers import dense_init, maybe_constrain, mlp_apply, mlp_init
+
+Params = Dict[str, Any]
+
+EYE3 = jnp.eye(3)
+
+
+def sym_traceless(m: jnp.ndarray) -> jnp.ndarray:
+    """Project (..., 3, 3) onto the symmetric-traceless (l=2) subspace."""
+    s = 0.5 * (m + jnp.swapaxes(m, -1, -2))
+    tr = jnp.trace(s, axis1=-2, axis2=-1)[..., None, None]
+    return s - tr * EYE3 / 3.0
+
+
+def bessel_rbf(r: jnp.ndarray, n: int, r_cut: float) -> jnp.ndarray:
+    """Radial Bessel basis with polynomial cutoff (MACE/NequIP standard)."""
+    r = jnp.maximum(r, 1e-9)
+    k = jnp.arange(1, n + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(k * math.pi * r[..., None] / r_cut) / r[..., None]
+    u = jnp.clip(r / r_cut, 0.0, 1.0)
+    # p=6 polynomial envelope
+    fc = 1 - 28 * u**6 + 48 * u**7 - 21 * u**8
+    return basis * fc[..., None]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: MACEConfig, key) -> Params:
+    C, R = cfg.d_hidden, cfg.n_rbf
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    layers = []
+    n_b = _n_basis(cfg.correlation_order)
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[3 + i], 12)
+        layers.append({
+            # radial MLPs: rbf -> per-channel weights for each message path
+            "rad_ss": mlp_init(kk[0], (R, 32, C)),
+            "rad_sv": mlp_init(kk[1], (R, 32, C)),
+            "rad_st": mlp_init(kk[2], (R, 32, C)),
+            "rad_vs": mlp_init(kk[3], (R, 32, C)),
+            "rad_vv": mlp_init(kk[4], (R, 32, C)),
+            "w_h": dense_init(kk[5], C, C),          # sender scalar mix
+            "w_hv": dense_init(kk[6], C, C),         # sender vector mix
+            # product-basis channel mixers (one per parity type)
+            "mix_s": dense_init(kk[7], n_b["s"] * C, C),
+            "mix_v": dense_init(kk[8], n_b["v"] * C, C),
+            "mix_t": dense_init(kk[9], n_b["t"] * C, C),
+            "skip_s": dense_init(kk[10], C, C),
+            "readout": mlp_init(kk[11], (C, cfg.d_readout, 1)),
+        })
+    return {
+        "species_embed": dense_init(ks[0], cfg.n_species, C, scale=1.0),
+        "layers": layers,
+    }
+
+
+def _n_basis(nu: int) -> Dict[str, int]:
+    """Number of product-basis features per parity type for correlation nu."""
+    # order-1: s,v,t each 1; order-2: s:3 v:2 t:3; order-3: s:3 v:3 t:2
+    ns, nv, nt = 1, 1, 1
+    if nu >= 2:
+        ns, nv, nt = ns + 3, nv + 2, nt + 3
+    if nu >= 3:
+        ns, nv, nt = ns + 3, nv + 3, nt + 2
+    return {"s": ns, "v": nv, "t": nt}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(p: Params, cfg: MACEConfig, *, species: jnp.ndarray,
+            positions: jnp.ndarray, senders: jnp.ndarray,
+            receivers: jnp.ndarray, graph_idx: jnp.ndarray,
+            n_graphs: int) -> jnp.ndarray:
+    """Total energy per graph.
+
+    species (N,), positions (N,3), senders/receivers (E,),
+    graph_idx (N,) -> energies (n_graphs,).
+    """
+    N = species.shape[0]
+    C = cfg.d_hidden
+
+    onehot = jax.nn.one_hot(species, cfg.n_species, dtype=jnp.float32)
+    h_s = onehot @ p["species_embed"]                             # (N,C)
+    h_v = jnp.zeros((N, C, 3))
+
+    rel = positions[receivers] - positions[senders]               # (E,3)
+    d2 = jnp.sum(rel * rel, -1)
+    # mask degenerate/self edges (grad of sqrt at 0 explodes in f32)
+    valid = d2 > 1e-10
+    d2 = jnp.where(valid, d2, 1.0)
+    dist = jnp.sqrt(d2)
+    rhat = rel / dist[:, None]
+    y1 = rhat                                                     # (E,3)
+    y2 = sym_traceless(rhat[:, :, None] * rhat[:, None, :])       # (E,3,3)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.r_cut)                  # (E,R)
+    rbf = rbf * valid[:, None]
+
+    energies = jnp.zeros((n_graphs,))
+    for lp in p["layers"]:
+        rad = {k: mlp_apply(lp[k], rbf, act=jax.nn.silu)
+               for k in ("rad_ss", "rad_sv", "rad_st", "rad_vs", "rad_vv")}
+        hs_e = (h_s @ lp["w_h"])[senders]                         # (E,C)
+        hv_e = jnp.einsum("ncj,cd->ndj", h_v, lp["w_hv"])[senders]  # (E,C,3)
+
+        # --- A-basis: radial x angular x sender features, summed over edges
+        # edge tensors are pinned across the WHOLE mesh (params are
+        # replicated for GNNs, so the model axis is free batch
+        # parallelism): at ogb scale m_t alone is ~285 GB global —
+        # 16-way sharding would still be 18 GB/device.
+        pin_e = lambda t: maybe_constrain(t, "__all__", *([None] * (t.ndim - 1)))
+        m_s = pin_e(rad["rad_ss"] * hs_e
+                    + rad["rad_vs"] * jnp.einsum("ecj,ej->ec", hv_e, y1))
+        m_v = pin_e(rad["rad_sv"][..., None] * hs_e[..., None] * y1[:, None, :]
+                    + rad["rad_vv"][..., None] * hv_e)
+        m_t = pin_e(rad["rad_st"][..., None, None] * hs_e[..., None, None]
+                    * y2[:, None])
+
+        A_s = pin_e(jax.ops.segment_sum(m_s, receivers, num_segments=N))
+        A_v = pin_e(jax.ops.segment_sum(m_v, receivers, num_segments=N))
+        A_t = pin_e(jax.ops.segment_sum(m_t, receivers, num_segments=N))
+
+        # --- ACE product basis by successive Cartesian contractions
+        feats_s = [A_s]
+        feats_v = [A_v]
+        feats_t = [A_t]
+        if cfg.correlation_order >= 2:
+            vv = jnp.einsum("ncj,ncj->nc", A_v, A_v)
+            tt = jnp.einsum("ncij,ncij->nc", A_t, A_t)
+            tv = jnp.einsum("ncij,ncj->nci", A_t, A_v)
+            feats_s += [A_s * A_s, vv, tt]
+            feats_v += [A_s[..., None] * A_v, tv]
+            feats_t += [sym_traceless(A_v[..., :, None] * A_v[..., None, :]),
+                        A_s[..., None, None] * A_t,
+                        sym_traceless(jnp.einsum("ncik,nckj->ncij", A_t, A_t))]
+        if cfg.correlation_order >= 3:
+            vv = feats_s[2]
+            tv = feats_v[2]
+            feats_s += [A_s * A_s * A_s,
+                        vv * A_s,
+                        jnp.einsum("nci,nci->nc", tv, A_v)]       # v.T t v
+            feats_v += [vv[..., None] * A_v,
+                        A_s[..., None] * tv,
+                        jnp.einsum("ncij,ncj->nci", feats_t[3], A_v)]
+            feats_t += [A_s[..., None, None] *
+                        sym_traceless(A_v[..., :, None] * A_v[..., None, :]),
+                        sym_traceless(A_v[..., :, None] * tv[..., None, :])]
+
+        B_s = jnp.concatenate(feats_s, axis=-1)                   # (N, nb_s*C)
+        B_v = jnp.concatenate(feats_v, axis=-2)                   # (N, nb_v*C, 3)
+        B_t = jnp.concatenate(feats_t, axis=-3)                   # (N, nb_t*C, 3,3)
+
+        h_s = B_s @ lp["mix_s"] + h_s @ lp["skip_s"]
+        h_v = jnp.einsum("nbj,bc->ncj", B_v, lp["mix_v"])
+        # rank-2 features feed the next layer only through products; keep h_t
+        # implicit (MACE also truncates message irreps at l_max).
+        node_e = mlp_apply(lp["readout"], h_s, act=jax.nn.silu)[:, 0]
+        energies = energies + jax.ops.segment_sum(node_e, graph_idx,
+                                                  num_segments=n_graphs)
+    return energies
+
+
+def energy_and_forces(p: Params, cfg: MACEConfig, **inputs):
+    def etot(pos):
+        e = forward(p, cfg, **{**inputs, "positions": pos})
+        return e.sum(), e
+    (_, e), neg_f = jax.value_and_grad(etot, has_aux=True)(inputs["positions"])
+    return e, -neg_f
+
+
+def mace_loss(p: Params, cfg: MACEConfig, batch: Dict[str, jnp.ndarray],
+              n_graphs: int, force_weight: float = 10.0) -> jnp.ndarray:
+    """Energy + force matching loss (the standard MACE objective)."""
+    inputs = {k: batch[k] for k in
+              ("species", "positions", "senders", "receivers", "graph_idx")}
+    e, f = energy_and_forces(p, cfg, n_graphs=n_graphs, **inputs)
+    le = jnp.mean(jnp.square(e - batch["energy"]))
+    lf = jnp.mean(jnp.sum(jnp.square(f - batch["forces"]), -1))
+    return le + force_weight * lf

@@ -1,0 +1,200 @@
+"""Recsys architectures: AutoInt, DLRM (MLPerf), SASRec, BERT4Rec.
+
+All functional; embedding tables use the packed MultiTable layout so they
+row-shard on the model axis (the production DLRM pattern). Sequential
+recommenders share a small transformer encoder built on layers.gqa_attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RecsysConfig
+from .embedding_bag import MultiTable
+from .layers import (dense_init, embed_init, gqa_attention, layer_norm,
+                     mlp_apply, mlp_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt  [arXiv:1810.11921]
+# ---------------------------------------------------------------------------
+
+def autoint_init(cfg: RecsysConfig, key) -> Params:
+    mt = MultiTable(cfg.vocab_sizes, cfg.embed_dim)
+    ks = jax.random.split(key, 4 + cfg.n_attn_layers * 4)
+    d_in, d_attn, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    d = d_in
+    for i in range(cfg.n_attn_layers):
+        k0, k1, k2, k3 = ks[4 + i * 4: 8 + i * 4]
+        layers.append({
+            "wq": dense_init(k0, d, H * d_attn),
+            "wk": dense_init(k1, d, H * d_attn),
+            "wv": dense_init(k2, d, H * d_attn),
+            "w_res": dense_init(k3, d, H * d_attn),
+        })
+        d = H * d_attn
+    return {
+        "table": mt.init(ks[0]),
+        "attn": layers,
+        "w_out": dense_init(ks[1], cfg.n_sparse * d, 1),
+        "b_out": jnp.zeros((1,)),
+    }
+
+
+def autoint_forward(p: Params, cfg: RecsysConfig, ids: jnp.ndarray) -> jnp.ndarray:
+    """ids: (B, n_sparse) -> CTR logit (B,)."""
+    mt = MultiTable(cfg.vocab_sizes, cfg.embed_dim)
+    x = mt.lookup(p["table"], ids)                                # (B,F,De)
+    B, F, _ = x.shape
+    H, da = cfg.n_heads, cfg.d_attn
+    for lp in p["attn"]:
+        q = (x @ lp["wq"]).reshape(B, F, H, da)
+        k = (x @ lp["wk"]).reshape(B, F, H, da)
+        v = (x @ lp["wv"]).reshape(B, F, H, da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / math.sqrt(da)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ lp["w_res"])
+    return (x.reshape(B, -1) @ p["w_out"] + p["b_out"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DLRM  [arXiv:1906.00091] (MLPerf config)
+# ---------------------------------------------------------------------------
+
+def dlrm_init(cfg: RecsysConfig, key) -> Params:
+    mt = MultiTable(cfg.vocab_sizes, cfg.embed_dim)
+    k0, k1, k2 = jax.random.split(key, 3)
+    n_vec = cfg.n_sparse + 1
+    n_inter = n_vec * (n_vec - 1) // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    return {
+        "table": mt.init(k0, scale=1.0 / math.sqrt(cfg.embed_dim)),
+        "bot": mlp_init(k1, tuple(cfg.bot_mlp)),
+        "top": mlp_init(k2, (top_in,) + tuple(cfg.top_mlp)),
+    }
+
+
+def dlrm_forward(p: Params, cfg: RecsysConfig, dense: jnp.ndarray,
+                 sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """dense: (B, 13); sparse_ids: (B, 26) -> CTR logit (B,)."""
+    mt = MultiTable(cfg.vocab_sizes, cfg.embed_dim)
+    z = mlp_apply(p["bot"], dense, act=jax.nn.relu, final_act=jax.nn.relu)  # (B,De)
+    emb = mt.lookup(p["table"], sparse_ids)                       # (B,26,De)
+    allv = jnp.concatenate([z[:, None, :], emb], axis=1)          # (B,27,De)
+    inter = jnp.einsum("bfd,bgd->bfg", allv, allv)                # (B,27,27)
+    n = allv.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju]                                       # (B, 351)
+    x = jnp.concatenate([z, flat], axis=1)
+    return mlp_apply(p["top"], x, act=jax.nn.relu)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Sequential recommenders (SASRec causal / BERT4Rec bidirectional)
+# ---------------------------------------------------------------------------
+
+def seqrec_init(cfg: RecsysConfig, key) -> Params:
+    d, H = cfg.embed_dim, max(cfg.n_heads, 1)
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[3 + i], 6)
+        blocks.append({
+            "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "wq": dense_init(kk[0], d, d), "wk": dense_init(kk[1], d, d),
+            "wv": dense_init(kk[2], d, d), "wo": dense_init(kk[3], d, d),
+            "w1": dense_init(kk[4], d, 4 * d), "w2": dense_init(kk[5], 4 * d, d),
+        })
+    n_rows = -(-(cfg.n_items + 2) // 512) * 512   # row-shardable padding
+    return {
+        # +2 rows: padding id (= n_items) and mask token (= n_items+1, BERT4Rec)
+        "item_emb": embed_init(ks[0], n_rows, d),
+        "pos_emb": embed_init(ks[1], cfg.seq_len, d),
+        "blocks": blocks,
+        "ln_f_s": jnp.ones((d,)), "ln_f_b": jnp.zeros((d,)),
+    }
+
+
+def seqrec_encode(p: Params, cfg: RecsysConfig, items: jnp.ndarray) -> jnp.ndarray:
+    """items: (B, S) item ids -> hidden (B, S, d)."""
+    B, S = items.shape
+    d, H = cfg.embed_dim, max(cfg.n_heads, 1)
+    hd = d // H
+    x = p["item_emb"].at[items].get(mode="clip") + p["pos_emb"][None, :S]
+    for bp in p["blocks"]:
+        h = layer_norm(x, bp["ln1_s"], bp["ln1_b"])
+        q = (h @ bp["wq"]).reshape(B, S, H, hd)
+        k = (h @ bp["wk"]).reshape(B, S, H, hd)
+        v = (h @ bp["wv"]).reshape(B, S, H, hd)
+        o = gqa_attention(q, k, v, causal=cfg.causal, chunk=max(S, 1))
+        x = x + o.reshape(B, S, d) @ bp["wo"]
+        h = layer_norm(x, bp["ln2_s"], bp["ln2_b"])
+        x = x + jax.nn.relu(h @ bp["w1"]) @ bp["w2"]
+    return layer_norm(x, p["ln_f_s"], p["ln_f_b"])
+
+
+def seqrec_score_items(p: Params, hidden_last: jnp.ndarray,
+                       candidate_ids: jnp.ndarray) -> jnp.ndarray:
+    """hidden_last: (B, d); candidate_ids: (C,) -> scores (B, C)."""
+    cand = p["item_emb"].at[candidate_ids].get(mode="clip")       # (C,d)
+    return hidden_last @ cand.T
+
+
+def seqrec_pair_scores(p: Params, cfg: RecsysConfig, items: jnp.ndarray,
+                       target: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise (sequence, target item) scores: items (B,S), target (B,)."""
+    h = seqrec_encode(p, cfg, items)[:, -1]                       # (B,d)
+    t = p["item_emb"].at[target].get(mode="clip")
+    return jnp.sum(h * t, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps (shared)
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = jnp.clip(logits, -30, 30)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def sasrec_loss(p: Params, cfg: RecsysConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """BPR-style: next-item positives vs sampled negatives.
+
+    batch: items (B,S), pos (B,S), neg (B,S), mask (B,S).
+    """
+    h = seqrec_encode(p, cfg, batch["items"])                     # (B,S,d)
+    pe = p["item_emb"].at[batch["pos"]].get(mode="clip")
+    ne = p["item_emb"].at[batch["neg"]].get(mode="clip")
+    sp = jnp.sum(h * pe, -1)
+    sn = jnp.sum(h * ne, -1)
+    m = batch["mask"].astype(jnp.float32)
+    loss = -jnp.log(jax.nn.sigmoid(sp - sn) + 1e-9) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def bert4rec_loss(p: Params, cfg: RecsysConfig, batch: Dict[str, jnp.ndarray],
+                  n_negatives: int = 128) -> jnp.ndarray:
+    """Masked-item prediction with sampled softmax.
+
+    batch: items (B,S) with mask-token at masked slots, labels (B,S) w/ -1
+    ignore, negatives (n_negatives,) sampled ids.
+    """
+    h = seqrec_encode(p, cfg, batch["items"])                     # (B,S,d)
+    labels = batch["labels"]
+    valid = labels >= 0
+    pos_e = p["item_emb"].at[labels.clip(0)].get(mode="clip")
+    pos_s = jnp.sum(h * pos_e, -1)                                # (B,S)
+    neg_e = p["item_emb"].at[batch["negatives"]].get(mode="clip")  # (n,d)
+    neg_s = jnp.einsum("bsd,nd->bsn", h, neg_e)
+    logits = jnp.concatenate([pos_s[..., None], neg_s], axis=-1)
+    ce = jax.nn.logsumexp(logits, -1) - pos_s
+    m = valid.astype(jnp.float32)
+    return (ce * m).sum() / jnp.maximum(m.sum(), 1.0)

@@ -1,0 +1,43 @@
+"""BM25 from the inverted index — conventional tf weights ("bm25") or the
+DeepCT contextual term weight stored as SEINE's `linear_agg` atomic function
+("bm25_deepct", the paper's `BM25 w/ DeepCT weight` run)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import QMeta, RetrieverSpec, fidx, register
+
+K1 = 1.2
+B = 0.75
+
+
+def _bm25(tfd: jnp.ndarray, meta: QMeta) -> jnp.ndarray:
+    """tfd: (B, Q) per-doc term weights -> (B,) BM25 scores."""
+    dl = meta.doc_len[:, None]
+    norm = K1 * (1.0 - B + B * dl / jnp.maximum(meta.avg_dl, 1.0))
+    s = meta.q_idf[None, :] * tfd * (K1 + 1.0) / (tfd + norm)
+    return jnp.sum(s * meta.q_mask[None, :], axis=1)
+
+
+def init(key, n_b: int, functions):
+    return {}
+
+
+def score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    tfd = M[..., fidx(functions, "tf")].sum(-1)        # (B, Q)
+    return _bm25(tfd, meta)
+
+
+def score_deepct(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    # DeepCT: replace tf with the learned contextual term weight
+    # (relu'd linear_agg aggregated over segments, scaled to tf range).
+    w = jnp.maximum(M[..., fidx(functions, "linear_agg")], 0.0).sum(-1)
+    present = (M[..., fidx(functions, "tf")].sum(-1) > 0)
+    return _bm25(w * 10.0 * present, meta)
+
+
+SPEC = register(RetrieverSpec(name="bm25", init=init, score=score,
+                              needs=("tf", "idf_indicator")))
+SPEC_DEEPCT = register(RetrieverSpec(name="bm25_deepct", init=init,
+                                     score=score_deepct,
+                                     needs=("tf", "linear_agg")))

@@ -1,0 +1,62 @@
+"""DeepTileBars [Tang & Yang, AAAI'19] — CNNs over topical tile bars.
+
+Paper §3.1: supported by SEINE's term frequency, indicative idf and
+Gaussian-kernel atomic values. The (Q, n_b) interaction image (channels =
+the three functions) is scanned by multiple varied-width Conv1Ds along the
+segment (tile) axis, max/mean-pooled, then aggregated over query terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import dense_init, mlp_apply, mlp_init
+from .base import QMeta, RetrieverSpec, fidx, register
+
+WIDTHS = (1, 2, 3, 4, 5)
+N_FILT = 8
+CHANNELS = ("tf", "idf_indicator", "gauss_max")
+
+
+def init(key, n_b: int, functions):
+    ks = jax.random.split(key, len(WIDTHS) + 1)
+    convs = []
+    for i, w in enumerate(WIDTHS):
+        convs.append({
+            "w": dense_init(ks[i], w * len(CHANNELS), N_FILT),
+            "b": jnp.zeros((N_FILT,)),
+        })
+    d_feat = len(WIDTHS) * N_FILT * 2
+    return {"convs": convs, "mlp": mlp_init(ks[-1], (d_feat, 32, 1))}
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, width: int) -> jnp.ndarray:
+    """x: (..., n_b, C); w: (width*C, F). Valid conv along n_b via patches."""
+    n_b = x.shape[-2]
+    pads = [(0, 0)] * (x.ndim - 2) + [(0, max(0, width - 1)), (0, 0)]
+    xp = jnp.pad(x, pads)
+    patches = jnp.stack([xp[..., i:i + n_b, :] for i in range(width)], axis=-1)
+    patches = patches.reshape(*x.shape[:-1], -1)        # (..., n_b, width*C)
+    return patches @ w
+
+
+def score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    img = jnp.stack([M[..., fidx(functions, c)] for c in CHANNELS], axis=-1)
+    # (B, Q, n_b, C); normalise tf channel by segment length
+    seg_norm = jnp.maximum(meta.seg_len, 1.0)[:, None, :, None]
+    img = jnp.concatenate([img[..., :1] / seg_norm, img[..., 1:]], axis=-1)
+    feats = []
+    for w, cp in zip(WIDTHS, params["convs"]):
+        h = jax.nn.relu(_conv1d(img, cp["w"], w) + cp["b"])  # (B,Q,n_b,F)
+        seg_mask = (meta.seg_len > 0).astype(jnp.float32)[:, None, :, None]
+        h = h * seg_mask
+        feats.append(h.max(axis=2))
+        feats.append(h.sum(axis=2) / jnp.maximum(seg_mask.sum(axis=2), 1.0))
+    f = jnp.concatenate(feats, axis=-1)                  # (B, Q, feat)
+    f = f * meta.q_mask[None, :, None]
+    pooled = f.sum(axis=1) / jnp.maximum(meta.q_mask.sum(), 1.0)
+    return mlp_apply(params["mlp"], pooled, act=jax.nn.relu)[:, 0]
+
+
+SPEC = register(RetrieverSpec(name="deeptilebars", init=init, score=score,
+                              needs=CHANNELS))

@@ -1,0 +1,21 @@
+"""Dot-product retriever (SNRM-style, §3.1): s(q,d) = sum_i q_i d_i over
+matched terms — with SEINE, the stored `dot` atomic values summed over query
+terms and segments."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .base import QMeta, RetrieverSpec, fidx, register
+
+
+def init(key, n_b: int, functions):
+    return {}
+
+
+def score(params, M: jnp.ndarray, meta: QMeta, functions) -> jnp.ndarray:
+    d = M[..., fidx(functions, "dot")]                 # (B, Q, n_b)
+    return jnp.sum(d * meta.q_mask[None, :, None], axis=(1, 2))
+
+
+SPEC = register(RetrieverSpec(name="dot", init=init, score=score,
+                              needs=("dot",)))

@@ -1,0 +1,59 @@
+"""HiNT [Fan et al., SIGIR'18] — hierarchical neural matching.
+
+Structure preserved from the paper: a LOCAL matching layer builds
+passage(segment)-level relevance signals from the q-d interaction matrix,
+and a GLOBAL decision layer accumulates evidence across segments
+(select top-k signals + sequential accumulation). Simplifications vs. the
+original (GRU -> mean+top-k pooling hybrid; xor/cos dual channels ->
+SEINE's stored channels) are noted in DESIGN.md; the hierarchy and the
+segment granularity — the parts SEINE's index must serve — are faithful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import dense_init, mlp_apply, mlp_init
+from .base import QMeta, RetrieverSpec, fidx, register
+
+D_LOCAL = 32
+TOP_K = 8
+
+
+def init(key, n_b: int, functions):
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_ch = 4  # tf, idf_indicator, cosine, dot
+    return {
+        "local": mlp_init(k1, (3 * n_ch, 64, D_LOCAL)),
+        "gate": dense_init(k2, D_LOCAL, 1),
+        "decision": mlp_init(k3, (2 * D_LOCAL, 64, 1)),
+    }
+
+
+def score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    chans = [M[..., fidx(functions, c)]
+             for c in ("tf", "idf_indicator", "cosine", "dot")]
+    x = jnp.stack(chans, axis=-1)                       # (B, Q, n_b, C)
+    x = x * meta.q_mask[None, :, None, None]
+    denom = jnp.maximum(meta.seg_len, 1.0)[:, None, :, None]
+    xn = x / denom
+    # local matching: per-segment statistics over query terms
+    qsum = jnp.maximum(meta.q_mask.sum(), 1.0)
+    feats = jnp.concatenate([x.sum(1) / qsum, xn.sum(1) / qsum, x.max(1)],
+                            axis=-1)                    # (B, n_b, 3C)
+    local = jax.nn.tanh(mlp_apply(params["local"], feats, act=jax.nn.relu))
+    # global decision: gated importance + top-k evidence accumulation
+    gate = jax.nn.softmax(
+        (local @ params["gate"])[..., 0]
+        + jnp.where(meta.seg_len > 0, 0.0, -1e9), axis=-1)  # (B, n_b)
+    attended = jnp.einsum("bn,bnd->bd", gate, local)
+    sig = (local @ params["gate"])[..., 0]
+    k = min(TOP_K, sig.shape[-1])
+    topv, topi = jax.lax.top_k(sig, k)
+    top_repr = jnp.take_along_axis(local, topi[..., None], axis=1).mean(1)
+    h = jnp.concatenate([attended, top_repr], axis=-1)
+    return mlp_apply(params["decision"], h, act=jax.nn.relu)[:, 0]
+
+
+SPEC = register(RetrieverSpec(name="hint", init=init, score=score,
+                              needs=("tf", "idf_indicator", "cosine", "dot")))

@@ -1,0 +1,80 @@
+"""Impact-style retrievers over SEINE's contextual atomic functions.
+
+The paper identifies the atomic interaction functions of TILDE [61],
+EPIC [28] and DeepImpact [30] and stores them in the index (§2.3) but
+leaves evaluating them as future work ("our main focus is to rejuvenate
+the index-less re-rankers"). Since the values are already in our index,
+we close that loop — three additional retrievers, each a pure scorer over
+M_{q,d}, giving SEINE nine supported retrieval methods in total:
+
+* ``tilde``      — deep query likelihood: score = sum_w log P(w|S) pooled
+                   over segments (atomic function 9).
+* ``epic``       — max-op contextual term impact (atomic function 7)
+                   weighted by idf.
+* ``deepimpact`` — learned MLP term impacts (atomic function 8) summed
+                   over matched terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import dense_init
+from .base import QMeta, RetrieverSpec, fidx, register
+
+
+# --- TILDE: deep query likelihood --------------------------------------------
+
+def tilde_init(key, n_b: int, functions):
+    return {}
+
+
+def tilde_score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    logp = M[..., fidx(functions, "log_cond_prob")]     # (B, Q, n_b)
+    present = M[..., fidx(functions, "tf")] > 0
+    # query likelihood of the best-matching segment, summed over terms
+    # (log P stored only for present pairs at sigma=0 — absent terms take
+    # a fixed OOV penalty, the standard smoothed-QL treatment)
+    seg_ok = (meta.seg_len > 0)[:, None, :]
+    best = jnp.where(present & seg_ok, logp, -12.0).max(axis=-1)  # (B, Q)
+    return jnp.sum(best * meta.q_mask[None, :], axis=1)
+
+
+register(RetrieverSpec(name="tilde", init=tilde_init, score=tilde_score,
+                       needs=("log_cond_prob", "tf")))
+
+
+# --- EPIC: contextual impact via the max-op function --------------------------
+
+def epic_init(key, n_b: int, functions):
+    return {"w": jnp.ones(()), "b": jnp.zeros(())}
+
+
+def epic_score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    imp = M[..., fidx(functions, "max_op")]             # (B, Q, n_b)
+    present = M[..., fidx(functions, "tf")].sum(-1) > 0  # (B, Q)
+    doc_imp = jax.nn.relu(params["w"] * imp + params["b"]).max(axis=-1)
+    s = doc_imp * meta.q_idf[None, :] * present
+    return jnp.sum(s * meta.q_mask[None, :], axis=1)
+
+
+register(RetrieverSpec(name="epic", init=epic_init, score=epic_score,
+                       needs=("max_op", "tf")))
+
+
+# --- DeepImpact: learned MLP term impacts -------------------------------------
+
+def deepimpact_init(key, n_b: int, functions):
+    return {"scale": jnp.ones(()), "bias": jnp.zeros(())}
+
+
+def deepimpact_score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    imp = M[..., fidx(functions, "mlp_emb")]            # (B, Q, n_b)
+    present = M[..., fidx(functions, "tf")] > 0
+    term_imp = jax.nn.relu(jnp.where(present, imp, 0.0)).sum(axis=-1)
+    s = params["scale"] * term_imp + params["bias"] * (term_imp > 0)
+    return jnp.sum(s * meta.q_mask[None, :], axis=1)
+
+
+register(RetrieverSpec(name="deepimpact", init=deepimpact_init,
+                       score=deepimpact_score, needs=("mlp_emb", "tf")))

@@ -1,0 +1,47 @@
+"""KNRM [Xiong et al., SIGIR'17] — kernel pooling over match signals.
+
+Paper §3.1: "KNRM are supported by cosine similarity". The stored cosine is
+a segment-aggregated sum; we length-normalise per segment to recover a mean
+match signal in [-1, 1], apply the RBF kernel bank (11 kernels, the original
+mu grid), log-pool over segments, and combine with a learned linear layer.
+
+The kernel bank is also a Pallas kernel (kernels/knrm_pool) — this jnp
+implementation is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import dense_init
+from .base import QMeta, RetrieverSpec, fidx, register
+
+MUS = jnp.array([1.0, 0.9, 0.7, 0.5, 0.3, 0.1, -0.1, -0.3, -0.5, -0.7, -0.9])
+SIGMAS = jnp.array([0.001] + [0.1] * 10)
+
+
+def kernel_features(cos_norm: jnp.ndarray, seg_mask: jnp.ndarray) -> jnp.ndarray:
+    """cos_norm: (..., n_b) in [-1,1]; seg_mask: (..., n_b) ->
+    (..., K) log-pooled soft-TF features."""
+    k = jnp.exp(-0.5 * ((cos_norm[..., None] - MUS) / SIGMAS) ** 2)
+    k = k * seg_mask[..., None]
+    return jnp.log1p(k.sum(axis=-2))                    # pool over segments
+
+
+def init(key, n_b: int, functions):
+    return {"w": dense_init(key, MUS.shape[0], 1), "b": jnp.zeros((1,))}
+
+
+def score(params, M, meta: QMeta, functions) -> jnp.ndarray:
+    cos = M[..., fidx(functions, "cosine")]             # (B, Q, n_b)
+    seg_mask = (meta.seg_len > 0).astype(jnp.float32)[:, None, :]  # (B,1,n_b)
+    denom = jnp.maximum(meta.seg_len, 1.0)[:, None, :]
+    cos_norm = jnp.clip(cos / denom, -1.0, 1.0)
+    phi = kernel_features(cos_norm, seg_mask)           # (B, Q, K)
+    phi = phi * meta.q_mask[None, :, None]
+    pooled = phi.sum(axis=1)                            # (B, K)
+    return (pooled @ params["w"] + params["b"])[:, 0]
+
+
+SPEC = register(RetrieverSpec(name="knrm", init=init, score=score,
+                              needs=("cosine",)))

@@ -1,0 +1,5 @@
+from .engine import (NoIndexEngine, SeineEngine, ServeStats, make_qmeta,
+                     serve_batches)
+
+__all__ = ["NoIndexEngine", "SeineEngine", "ServeStats", "make_qmeta",
+           "serve_batches"]

@@ -1,0 +1,105 @@
+"""Query-time retrieval engines (the paper's retrieval phase, Fig. 1).
+
+``SeineEngine``  — looks M_{q,d} up from the segment inverted index (fast path).
+``NoIndexEngine`` — recomputes interactions on the fly (the paper's baseline).
+
+Both expose the same `score(query, doc_ids)` so Table-1-style efficiency
+comparisons are one engine swap. A tiny batched request loop provides the
+serving driver used by launch/serve.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.builder import IndexBuilder
+from ..core.index import SegmentInvertedIndex
+from ..retrievers import QMeta, get_retriever
+
+
+def make_qmeta(index: SegmentInvertedIndex, query_terms: jnp.ndarray,
+               doc_ids: jnp.ndarray) -> QMeta:
+    return QMeta(
+        q_mask=(query_terms >= 0).astype(jnp.float32),
+        q_idf=index.idf.at[query_terms.clip(0)].get(mode="clip")
+        * (query_terms >= 0),
+        doc_len=index.doc_len.at[doc_ids].get(mode="clip"),
+        seg_len=index.seg_len.at[doc_ids].get(mode="clip"),
+        avg_dl=index.avg_doc_len,
+    )
+
+
+class SeineEngine:
+    def __init__(self, index: SegmentInvertedIndex, retriever: str,
+                 params: Any):
+        self.index = index
+        self.spec = get_retriever(retriever)
+        self.params = params
+        self._score = jax.jit(self._score_impl)
+
+    def _score_impl(self, params, query_terms, doc_ids):
+        m = self.index.qd_matrix(query_terms, doc_ids)
+        meta = make_qmeta(self.index, query_terms, doc_ids)
+        return self.spec.score(params, m, meta, self.index.functions)
+
+    def score(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
+              ) -> jnp.ndarray:
+        return self._score(self.params, query_terms, doc_ids)
+
+
+class NoIndexEngine:
+    """Recomputes the q-d interaction matrix at query time (No Index row)."""
+
+    def __init__(self, builder: IndexBuilder, index: SegmentInvertedIndex,
+                 tokens: np.ndarray, segs: np.ndarray, retriever: str,
+                 params: Any):
+        # `index` is used ONLY for doc stats/idf (identical qmeta), never
+        # for interaction values.
+        self.builder = builder
+        self.index = index
+        self.tokens = jnp.asarray(tokens)
+        self.segs = jnp.asarray(segs)
+        self.spec = get_retriever(retriever)
+        self.params = params
+        qd_fn = builder.make_qd_fn()
+
+        def impl(params, query_terms, doc_ids):
+            m = qd_fn(query_terms, self.tokens[doc_ids], self.segs[doc_ids])
+            meta = make_qmeta(self.index, query_terms, doc_ids)
+            return self.spec.score(params, m, meta, self.index.functions)
+
+        self._score = jax.jit(impl)
+
+    def score(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
+              ) -> jnp.ndarray:
+        return self._score(self.params, query_terms, doc_ids)
+
+
+@dataclass
+class ServeStats:
+    n_requests: int = 0
+    total_ms: float = 0.0
+
+    @property
+    def ms_per_request(self) -> float:
+        return self.total_ms / max(self.n_requests, 1)
+
+
+def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
+                  batch_pad: int = 0) -> Tuple[List[np.ndarray], ServeStats]:
+    """requests: list of (query_terms (Q,), candidate_doc_ids (B,))."""
+    stats = ServeStats()
+    out = []
+    for q, docs in requests:
+        t0 = time.perf_counter()
+        s = np.asarray(engine.score(jnp.asarray(q), jnp.asarray(docs)))
+        s_done = jax.block_until_ready(s)
+        stats.total_ms += (time.perf_counter() - t0) * 1e3
+        stats.n_requests += 1
+        out.append(np.asarray(s_done))
+    return out, stats

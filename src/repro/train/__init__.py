@@ -1,0 +1,8 @@
+from .loop import FitResult, TrainState, fit, make_train_step
+from .optimizer import (adafactor, adam, adamw, apply_updates,
+                        clip_by_global_norm, get_optimizer, global_norm, sgd,
+                        warmup_cosine)
+
+__all__ = ["FitResult", "TrainState", "fit", "make_train_step", "adafactor",
+           "adam", "adamw", "apply_updates", "clip_by_global_norm",
+           "get_optimizer", "global_norm", "sgd", "warmup_cosine"]

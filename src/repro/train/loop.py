@@ -1,0 +1,125 @@
+"""Generic training loop with the production affordances:
+
+grad accumulation, global-norm clipping, optional gradient compression
+(error feedback carried in the train state), periodic atomic checkpoints
+with auto-resume, straggler monitoring, cooperative preemption.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
+from ..dist.compression import compress_with_feedback, init_error_feedback
+from ..dist.fault import PreemptionGuard, StragglerMonitor
+from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    residual: Any = None      # error-feedback buffer (compression on)
+    step: int = 0
+
+
+def make_train_step(loss_fn: Callable, opt: Optimizer, *,
+                    clip_norm: float = 1.0, accum: int = 1,
+                    compression: Optional[str] = None,
+                    donate: bool = True) -> Callable:
+    """Returns jitted step(state_tuple, batch) -> (state_tuple, metrics).
+
+    loss_fn(params, batch) -> scalar. `accum` > 1 scans over microbatches
+    (batch's leading axis must be (accum, ...)).
+    """
+    def grads_of(params, batch):
+        if accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            tot, g = carry
+            l, gi = jax.value_and_grad(loss_fn)(params, mb)
+            return (tot + l, jax.tree.map(jnp.add, g, gi)), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tot, g), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), batch)
+        inv = 1.0 / accum
+        return tot * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def step(params, opt_state, residual, batch):
+        loss, grads = grads_of(params, batch)
+        if compression:
+            grads, residual = compress_with_feedback(grads, residual,
+                                                     scheme=compression)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, residual, {"loss": loss, "grad_norm": gnorm}
+
+    donate_argnums = (0, 1, 2) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+@dataclass
+class FitResult:
+    state: TrainState
+    history: list = field(default_factory=list)
+    straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
+
+
+def fit(state: TrainState, step_fn: Callable, next_batch: Callable[[int], Any],
+        *, n_steps: int, ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100, keep: int = 3, log_every: int = 50,
+        data_state: Optional[Callable[[], Dict]] = None,
+        guard: Optional[PreemptionGuard] = None,
+        verbose: bool = True) -> FitResult:
+    """Run the loop; resume from ckpt_dir if a checkpoint exists."""
+    res = FitResult(state=state)
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        tree = {"params": state.params, "opt": state.opt_state,
+                "residual": state.residual}
+        tree, manifest = restore_checkpoint(ckpt_dir, tree)
+        state.params, state.opt_state = tree["params"], tree["opt"]
+        state.residual = tree["residual"]
+        state.step = manifest["step"]
+        if verbose:
+            print(f"[fit] resumed at step {state.step}")
+
+    while state.step < n_steps:
+        if guard is not None and guard.should_stop:
+            if ckpt_dir:
+                _save(ckpt_dir, state, keep, data_state)
+            if verbose:
+                print(f"[fit] preempted at step {state.step}; checkpointed")
+            return res
+        batch = next_batch(state.step)
+        t0 = time.perf_counter()
+        state.params, state.opt_state, state.residual, metrics = step_fn(
+            state.params, state.opt_state, state.residual, batch)
+        metrics = {k: float(v) for k, v in
+                   jax.tree.map(lambda x: jax.block_until_ready(x), metrics).items()}
+        dt = time.perf_counter() - t0
+        slow = res.straggler.record(state.step, dt)
+        state.step += 1
+        res.history.append({"step": state.step, "sec": dt, **metrics,
+                            "straggler": slow})
+        if verbose and state.step % log_every == 0:
+            print(f"[fit] step {state.step} loss {metrics['loss']:.4f} "
+                  f"({dt*1e3:.0f} ms{' STRAGGLER' if slow else ''})")
+        if ckpt_dir and state.step % ckpt_every == 0:
+            _save(ckpt_dir, state, keep, data_state)
+    if ckpt_dir:
+        _save(ckpt_dir, state, keep, data_state)
+    return res
+
+
+def _save(ckpt_dir, state: TrainState, keep, data_state) -> None:
+    tree = {"params": state.params, "opt": state.opt_state,
+            "residual": state.residual}
+    extra = {"data": data_state()} if data_state else {}
+    save_checkpoint(ckpt_dir, state.step, tree, extra=extra, keep=keep,
+                    async_write=False)

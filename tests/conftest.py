@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 device (dryrun.py sets its own flags)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def seine_world():
+    """Small end-to-end SEINE world: corpus, vocab, segments, index."""
+    from repro.configs import seine_smoke
+    from repro.core import (HashProvider, IndexBuilder, build_vocabulary,
+                            segment_corpus)
+    from repro.data.batching import pad_queries
+    from repro.data.synth_corpus import generate
+
+    cfg = seine_smoke()
+    ds = generate(cfg, seed=0)
+    vocab = build_vocabulary(ds.docs, ds.n_raw_tokens,
+                             keep_frac=cfg.vocab_keep_frac)
+    slot_docs = [vocab.map_tokens(d) for d in ds.docs]
+    toks, segs = segment_corpus(slot_docs, cfg.n_segments, max_len=160,
+                                window=cfg.tile_window, smooth=cfg.tile_smooth)
+    provider = HashProvider(vocab.size, cfg.embed_dim, seed=0)
+    builder = IndexBuilder(cfg, vocab, provider)
+    index = builder.build(toks, segs, batch_size=16)
+    queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
+    return dict(cfg=cfg, ds=ds, vocab=vocab, toks=toks, segs=segs,
+                provider=provider, builder=builder, index=index,
+                queries=queries)

@@ -1,0 +1,40 @@
+"""Hand-rolled property-test harness.
+
+`hypothesis` is not installed in the offline container (documented in
+DESIGN.md §7); this gives the same invariant-first style: each property is
+checked across a deterministic sweep of seeds/shapes, and failures report
+the generating seed for reproduction.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable, Iterable
+
+import numpy as np
+
+
+def sweep(*param_iters, n_seeds: int = 3):
+    """Decorator: run the test for every combo x seed, reporting the combo
+    on failure."""
+    def deco(fn: Callable):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            combos = list(itertools.product(*param_iters)) or [()]
+            for combo in combos:
+                for seed in range(n_seeds):
+                    try:
+                        fn(*args, *combo, seed=seed, **kw)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"property failed for params={combo} seed={seed}: {e}"
+                        ) from e
+        return wrapper
+    return deco
+
+
+def rand_rotation(seed: int) -> np.ndarray:
+    q, _ = np.linalg.qr(np.random.RandomState(seed).randn(3, 3))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q.astype(np.float32)

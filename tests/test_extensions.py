@@ -1,0 +1,117 @@
+"""Beyond-paper extensions: impact retrievers (TILDE/EPIC/DeepImpact over
+SEINE functions 7-9) and the explicit distributed flash-decoding path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.metrics import evaluate_ranking, mean_metrics
+from repro.retrievers import all_retrievers, get_retriever
+from repro.serving import SeineEngine, make_qmeta
+
+
+def test_nine_retrievers_registered():
+    assert {"tilde", "epic", "deepimpact"} <= set(all_retrievers())
+    assert len(all_retrievers()) >= 9
+
+
+@pytest.mark.parametrize("name", ["tilde", "epic", "deepimpact"])
+def test_impact_retriever_scores(seine_world, name):
+    w = seine_world
+    idx = w["index"]
+    spec = get_retriever(name)
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+    eng = SeineEngine(idx, name, params)
+    q = jnp.asarray(w["queries"][0])
+    s = eng.score(q, jnp.arange(30))
+    assert s.shape == (30,)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    # scoring must depend on term presence: docs containing query terms
+    # should not all tie with docs that don't
+    assert float(jnp.std(s)) > 0 or not (w["queries"][0] >= 0).any()
+
+
+def test_impact_retrievers_beat_random(seine_world):
+    w = seine_world
+    idx = w["index"]
+    rng = np.random.RandomState(0)
+    for name in ("tilde", "epic", "deepimpact"):
+        spec = get_retriever(name)
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        eng = SeineEngine(idx, name, params)
+        ms, rand_ms = [], []
+        for qi in range(len(w["queries"])):
+            docs = jnp.arange(len(w["ds"].docs))
+            s = np.asarray(eng.score(jnp.asarray(w["queries"][qi]), docs))
+            ms.append(evaluate_ranking(s, w["ds"].qrels[qi]))
+            rand_ms.append(evaluate_ranking(rng.randn(len(s)),
+                                            w["ds"].qrels[qi]))
+        assert mean_metrics(ms)["MAP"] > mean_metrics(rand_ms)["MAP"], name
+
+
+class TestSPDecode:
+    def test_stats_combine_matches_dense(self):
+        """Sharded online-softmax combination == dense attention (oracle),
+        simulated by splitting KV into chunks and combining by hand."""
+        from repro.dist.sp_decode import (combine_decode_stats,
+                                          local_decode_stats)
+        from repro.models.layers import naive_attention
+
+        B, S, Hq, Hkv, hd, n_shards = 2, 64, 4, 2, 16, 4
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd))
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+        lengths = jnp.asarray([40, 64])
+
+        # simulate the shard_map with a manual axis via vmap + psum-free
+        # combination: compute per-shard stats, then reduce sequentially
+        S_loc = S // n_shards
+        stats = []
+        for i in range(n_shards):
+            pos = i * S_loc + jnp.arange(S_loc)
+            valid = pos[None, :] < lengths[:, None]
+            stats.append(local_decode_stats(
+                q, k[:, i * S_loc:(i + 1) * S_loc],
+                v[:, i * S_loc:(i + 1) * S_loc], valid))
+        m = jnp.stack([s[0] for s in stats])
+        l = jnp.stack([s[1] for s in stats])
+        acc = jnp.stack([s[2] for s in stats])
+        m_glob = m.max(0)
+        m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_glob = (l * corr).sum(0)
+        acc_glob = (acc * corr[..., None]).sum(0)
+        out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+        # dense oracle per batch row (mask to its length)
+        for b in range(B):
+            L = int(lengths[b])
+            ref = naive_attention(q[b:b + 1, None], k[b:b + 1, :L],
+                                  v[b:b + 1, :L], causal=False)[0, 0]
+            np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_shard_map_path_single_device(self):
+        """The shard_map wrapper runs on a 1-device mesh and matches the
+        dense oracle (the 256-way version is what long_500k lowers)."""
+        from repro.dist.sp_decode import sp_decode_attention
+        from repro.models.layers import naive_attention
+
+        mesh = jax.make_mesh((1,), ("seq",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        B, S, Hq, Hkv, hd = 2, 32, 4, 2, 8
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd))
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+        lengths = jnp.asarray([20, 32])
+        with jax.set_mesh(mesh):
+            fn = sp_decode_attention(mesh, "seq")
+            out = fn(q, k, v, lengths)
+        for b in range(B):
+            L = int(lengths[b])
+            ref = naive_attention(q[b:b + 1, None], k[b:b + 1, :L],
+                                  v[b:b + 1, :L], causal=False)[0, 0]
+            np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)

@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (deliverable c).
+
+Pallas kernels run in interpret mode on CPU (the container has no TPU);
+shapes/dtypes swept per kernel, asserting against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (embed_bag, embed_bag_ref, flash_attention,
+                           flash_attn_ref, knrm_pool, knrm_pool_ref,
+                           seg_interact, seg_interact_ref)
+
+
+class TestSegInteract:
+    @pytest.mark.parametrize("V,S,Ls,De", [
+        (64, 4, 128, 32), (300, 7, 256, 128), (256, 3, 128, 64),
+        (128, 2, 128, 200),   # De needs padding to 128-multiple
+    ])
+    def test_matches_oracle(self, V, S, Ls, De):
+        k = jax.random.split(jax.random.key(V * S + De), 3)
+        ev = jax.random.normal(k[0], (V, De))
+        st = jax.random.normal(k[1], (S, Ls, De))
+        lens = jax.random.randint(k[2], (S,), 0, Ls + 1)
+        mask = (jnp.arange(Ls)[None] < lens[:, None]).astype(jnp.float32)
+        out = seg_interact(ev, st, mask)
+        ref = seg_interact_ref(ev, st * mask[..., None], mask)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_empty_segment_zeroes(self):
+        ev = jax.random.normal(jax.random.key(0), (64, 32))
+        st = jax.random.normal(jax.random.key(1), (2, 128, 32))
+        mask = jnp.zeros((2, 128)).at[0, :10].set(1.0)
+        out = np.asarray(seg_interact(ev, st, mask))
+        assert (out[:, 1, :] == 0).all(), "empty segment must produce zeros"
+
+    def test_bf16_inputs(self):
+        ev = jax.random.normal(jax.random.key(0), (128, 64), jnp.bfloat16)
+        st = jax.random.normal(jax.random.key(1), (3, 128, 64), jnp.bfloat16)
+        mask = jnp.ones((3, 128), jnp.float32)
+        out = seg_interact(ev, st, mask)
+        ref = seg_interact_ref(ev, st, mask)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_matches_index_builder_values(self, seine_world):
+        """The kernel computes the same dot/cos/gauss the index stores."""
+        w = seine_world
+        idx = w["index"]
+        table = np.asarray(w["provider"].table())
+        d = 5
+        toks, segs = w["toks"][d], w["segs"][d]
+        n_b = idx.n_b
+        Ls = 128
+        seg_tokens = np.zeros((n_b, Ls, table.shape[1]), np.float32)
+        mask = np.zeros((n_b, Ls), np.float32)
+        for b in range(n_b):
+            sel = toks[(segs == b) & (toks >= 0)][:Ls]
+            seg_tokens[b, :sel.size] = table[sel]
+            mask[b, :sel.size] = 1.0
+        present = np.unique(toks[toks >= 0])[:8].astype(np.int32)
+        out = np.asarray(seg_interact(jnp.asarray(table),
+                                      jnp.asarray(seg_tokens),
+                                      jnp.asarray(mask)))[present]
+        m = np.asarray(idx.qd_matrix(jnp.asarray(present),
+                                     jnp.asarray([d])))[0]
+        for name, ki in (("dot", 0), ("cosine", 1), ("gauss_max", 2)):
+            fi = idx.fn_index(name)
+            np.testing.assert_allclose(out[..., ki], m[..., fi],
+                                       rtol=1e-3, atol=1e-4,
+                                       err_msg=f"{name} mismatch")
+
+
+class TestKnrmPool:
+    @pytest.mark.parametrize("B,Q,nb", [(4, 8, 20), (2, 130, 5), (1, 6, 64)])
+    def test_matches_oracle(self, B, Q, nb):
+        k = jax.random.split(jax.random.key(B * Q + nb), 2)
+        c = jax.random.uniform(k[0], (B, Q, nb), minval=-1, maxval=1)
+        m = (jax.random.uniform(k[1], (B, nb)) > 0.3).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(knrm_pool(c, m)),
+                                   np.asarray(knrm_pool_ref(c, m)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_matches_retriever_features(self):
+        from repro.retrievers.knrm import kernel_features
+        c = jax.random.uniform(jax.random.key(0), (2, 6, 10),
+                               minval=-1, maxval=1)
+        m = jnp.ones((2, 10))
+        a = knrm_pool(c, m)
+        b = kernel_features(c, m[:, None, :])
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,Hq,Hkv,hd,bq,bk", [
+        (2, 128, 4, 2, 32, 64, 64),
+        (1, 256, 8, 8, 64, 128, 64),
+        (2, 64, 4, 1, 16, 32, 32),
+        (1, 96, 2, 2, 32, 32, 32),      # non-power-of-two seq
+    ])
+    def test_matches_oracle_causal(self, B, S, Hq, Hkv, hd, bq, bk):
+        ks = jax.random.split(jax.random.key(S + Hq), 3)
+        q = jax.random.normal(ks[0], (B, S, Hq, hd))
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        ref = flash_attn_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_noncausal(self):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+        ref = flash_attn_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_matches_model_attention(self):
+        """kernel == models.layers.gqa_attention (the dry-run stand-in)."""
+        from repro.models.layers import gqa_attention
+        ks = jax.random.split(jax.random.key(7), 3)
+        q = jax.random.normal(ks[0], (2, 64, 8, 32))
+        k = jax.random.normal(ks[1], (2, 64, 2, 32))
+        v = jax.random.normal(ks[2], (2, 64, 2, 32))
+        a = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        b = gqa_attention(q, k, v, causal=True, chunk=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestEmbedBag:
+    @pytest.mark.parametrize("V,D,B,maxbag", [
+        (100, 32, 8, 10), (50, 16, 4, 6), (200, 128, 16, 20), (30, 8, 5, 3),
+    ])
+    def test_matches_oracle(self, V, D, B, maxbag):
+        rng = np.random.RandomState(V + B)
+        lens = rng.randint(0, maxbag, B)
+        nnz = max(int(lens.sum()), 1)
+        offsets = np.concatenate([[0], np.cumsum(lens)])[:-1].astype(np.int32)
+        idx = rng.randint(0, V, nnz).astype(np.int32)
+        table = jax.random.normal(jax.random.key(0), (V, D))
+        a = embed_bag(table, jnp.asarray(idx), jnp.asarray(offsets), n_bags=B)
+        b = embed_bag_ref(table, jnp.asarray(idx), jnp.asarray(offsets),
+                          n_bags=B)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_empty_bags_zero(self):
+        table = jax.random.normal(jax.random.key(0), (10, 4))
+        idx = jnp.asarray([1, 2])
+        offs = jnp.asarray([0, 2, 2])  # bags: [1,2], [], []
+        out = np.asarray(embed_bag(table, idx, offs, n_bags=3))
+        assert (out[1] == 0).all() and (out[2] == 0).all()

@@ -1,0 +1,139 @@
+"""Retriever scorers: registry, finiteness, trainability, ranking sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.metrics import evaluate_ranking, mean_metrics
+from repro.retrievers import all_retrievers, get_retriever
+from repro.serving import NoIndexEngine, SeineEngine, make_qmeta
+
+ALL = ("dot", "bm25", "bm25_deepct", "knrm", "hint", "deeptilebars")
+
+
+def test_registry_complete():
+    assert set(ALL) <= set(all_retrievers())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scores_finite_and_shaped(seine_world, name):
+    w = seine_world
+    idx = w["index"]
+    spec = get_retriever(name)
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+    q = jnp.asarray(w["queries"][0])
+    docs = jnp.arange(16)
+    m = idx.qd_matrix(q, docs)
+    s = spec.score(params, m, make_qmeta(idx, q, docs), idx.functions)
+    assert s.shape == (16,)
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_engine_paths_agree(seine_world, name):
+    """SEINE engine == No-Index engine scores for stored pairs (the paper's
+    effectiveness-parity mechanism, retriever level)."""
+    w = seine_world
+    idx = w["index"]
+    spec = get_retriever(name)
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+    eng_i = SeineEngine(idx, name, params)
+    eng_n = NoIndexEngine(w["builder"], idx, w["toks"], w["segs"], name, params)
+    # pick (query, docs) pairs where every query term occurs in the doc ->
+    # all pairs stored -> scores must agree EXACTLY
+    rng = np.random.RandomState(0)
+    d = 11
+    present = np.unique(w["toks"][d][w["toks"][d] >= 0])
+    q = np.full(4, -1, np.int32)
+    sel = rng.choice(present, size=3, replace=False)
+    q[:3] = sel
+    si = np.asarray(eng_i.score(jnp.asarray(q), jnp.asarray([d])))
+    sn = np.asarray(eng_n.score(jnp.asarray(q), jnp.asarray([d])))
+    np.testing.assert_allclose(si, sn, rtol=2e-4, atol=2e-5)
+
+
+def test_bm25_ranks_relevant_docs(seine_world):
+    w = seine_world
+    idx = w["index"]
+    spec = get_retriever("bm25")
+    ms = []
+    for qi in range(len(w["queries"])):
+        q = jnp.asarray(w["queries"][qi])
+        docs = jnp.arange(len(w["ds"].docs))
+        s = spec.score({}, idx.qd_matrix(q, docs),
+                       make_qmeta(idx, q, docs), idx.functions)
+        ms.append(evaluate_ranking(np.asarray(s), w["ds"].qrels[qi]))
+    mm = mean_metrics(ms)
+    assert mm["P@5"] > 0.3, f"BM25 should beat random, got {mm}"
+
+
+@pytest.mark.parametrize("name", ("knrm", "hint", "deeptilebars"))
+def test_trainable_loss_decreases(seine_world, name):
+    from repro.data.batching import PairSampler
+    from repro.train import TrainState, adam, fit, make_train_step
+
+    w = seine_world
+    idx = w["index"]
+    spec = get_retriever(name)
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+
+    def loss_fn(params, batch):
+        def one(qi, p, n):
+            sp = spec.score(params, idx.qd_matrix(qi, p[None]),
+                            make_qmeta(idx, qi, p[None]), idx.functions)
+            sn = spec.score(params, idx.qd_matrix(qi, n[None]),
+                            make_qmeta(idx, qi, n[None]), idx.functions)
+            return jnp.maximum(0.0, 1.0 - sp + sn).mean()
+        return jax.vmap(one)(batch["q"], batch["pos"], batch["neg"]).mean()
+
+    sampler = PairSampler(w["ds"].qrels, np.arange(len(w["queries"])),
+                          batch_size=16, seed=3)
+
+    def next_batch(step):
+        b = sampler.next_batch()
+        return {"q": jnp.asarray(w["queries"][b["query"]]),
+                "pos": jnp.asarray(b["pos"]), "neg": jnp.asarray(b["neg"])}
+
+    opt = adam(3e-3)
+    step_fn = make_train_step(loss_fn, opt, donate=False)
+    st = TrainState(params=params, opt_state=opt.init(params),
+                    residual=jax.tree.map(
+                        lambda p: jnp.zeros_like(p, jnp.float32), params))
+    res = fit(st, step_fn, next_batch, n_steps=40, verbose=False)
+    first = np.mean([h["loss"] for h in res.history[:8]])
+    last = np.mean([h["loss"] for h in res.history[-8:]])
+    assert last <= first + 0.05, f"{name}: loss {first:.3f} -> {last:.3f}"
+
+
+def test_snrm_baseline_trains_and_degrades_lexical_match(seine_world):
+    """SNRM's latent matching loses lexical precision (Table 1 finding)."""
+    from repro.core import snrm as S
+
+    w = seine_world
+    toks = w["toks"]
+    p = S.init_snrm(jax.random.key(0), w["vocab"].size, d_latent=64)
+    rng = np.random.RandomState(0)
+    qs = jnp.asarray(w["queries"][:8])
+    loss0 = None
+    opt_lr = 1e-2
+    from repro.train import adam, apply_updates
+    opt = adam(opt_lr)
+    state = opt.init(p)
+    for step in range(30):
+        qi = rng.randint(0, len(w["queries"]), 8)
+        pos, neg = [], []
+        for q in qi:
+            rel = np.flatnonzero(w["ds"].qrels[q] > 0)
+            nrel = np.flatnonzero(w["ds"].qrels[q] == 0)
+            pos.append(rel[rng.randint(rel.size)] if rel.size else 0)
+            neg.append(nrel[rng.randint(nrel.size)] if nrel.size else 1)
+        batch = {"query": jnp.asarray(w["queries"][qi]),
+                 "pos": jnp.asarray(toks[pos]), "neg": jnp.asarray(toks[neg])}
+        loss, g = jax.value_and_grad(S.snrm_loss)(p, batch)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) <= loss0 + 1e-3
+    lat_ids, strength = S.latent_doc_sequences(p, toks[:10], top_k=8)
+    assert lat_ids.shape == (10, 8)

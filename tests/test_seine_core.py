@@ -1,0 +1,167 @@
+"""SEINE core: vocabulary, segmentation, index — the paper's §2 invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from prophelpers import sweep
+from repro.core import (FUNCTION_NAMES, build_vocabulary, segment_corpus,
+                        segment_ids)
+from repro.core.segment import texttile_boundaries
+
+
+class TestVocabulary:
+    def test_middle_band_filter(self):
+        # token 0 appears everywhere (top tail); token 999 once (bottom tail)
+        rng = np.random.RandomState(0)
+        docs = [np.concatenate([np.zeros(50, np.int64),
+                                rng.randint(1, 900, 200)]) for _ in range(50)]
+        docs[0] = np.concatenate([docs[0], [999]])
+        v = build_vocabulary(docs, 1000, keep_frac=(0.10, 0.90))
+        assert v.raw_to_slot[0] == -1, "most frequent term must be filtered"
+        assert v.raw_to_slot[999] == -1, "least frequent term must be filtered"
+        assert v.size > 0
+
+    def test_idf_monotone(self):
+        docs = [np.array([1, 2]), np.array([1, 3]), np.array([1, 4]),
+                np.array([2, 5, 6, 7, 8, 9, 10])]
+        v = build_vocabulary(docs, 20, keep_frac=(0.0, 1.0))
+        s1, s2 = v.raw_to_slot[1], v.raw_to_slot[2]
+        assert v.idf[s1] < v.idf[s2], "more docs -> lower idf"
+
+    def test_map_tokens_oov(self):
+        docs = [np.arange(10)] * 5
+        v = build_vocabulary(docs, 100, keep_frac=(0.0, 1.0))
+        out = v.map_tokens(np.array([0, 99, -5]))
+        assert out[1] == -1 and out[2] == -1
+
+
+class TestTextTiling:
+    def test_detects_topic_shift(self):
+        rng = np.random.RandomState(0)
+        # two strongly distinct vocab blocks
+        a = rng.randint(0, 50, 200)
+        b = rng.randint(500, 550, 200)
+        doc = np.concatenate([a, b])
+        bounds = texttile_boundaries(doc, window=20)
+        cut_tokens = (bounds + 1) * 20
+        assert any(abs(int(c) - 200) <= 40 for c in cut_tokens), \
+            f"boundary near the true shift expected, got {cut_tokens}"
+
+    def test_standardised_to_n_b(self):
+        @sweep([1, 3, 5, 20], n_seeds=2)
+        def prop(n_b, seed):
+            rng = np.random.RandomState(seed)
+            doc = rng.randint(0, 100, 400)
+            seg = segment_ids(doc, n_b)
+            assert seg.shape == doc.shape
+            assert seg.min() >= 0 and seg.max() < n_b
+            assert np.all(np.diff(seg) >= 0), "segments must be contiguous"
+
+        prop()
+
+    def test_granularity_extremes(self):
+        doc = np.arange(100)
+        assert segment_ids(doc, 1).max() == 0          # document-level
+        corpus_t, corpus_s = segment_corpus([doc], 4, max_len=50)
+        assert corpus_t.shape == (1, 50)
+        assert (corpus_t[0] >= 0).sum() == 50
+
+
+class TestIndexInvariants:
+    def test_lossless_for_stored_pairs(self, seine_world):
+        """THE paper invariant: index lookup == on-the-fly interaction."""
+        w = seine_world
+        qd_fn = w["builder"].make_qd_fn()
+        rng = np.random.RandomState(1)
+        for d in rng.randint(0, len(w["ds"].docs), 4):
+            present = np.unique(w["toks"][d][w["toks"][d] >= 0])
+            q = np.full(4, -1, np.int32)
+            sel = rng.choice(present, size=min(3, present.size), replace=False)
+            q[:sel.size] = sel
+            on_fly = np.asarray(qd_fn(jnp.asarray(q),
+                                      jnp.asarray(w["toks"][d:d + 1]),
+                                      jnp.asarray(w["segs"][d:d + 1])))[0]
+            looked = np.asarray(w["index"].qd_matrix(jnp.asarray(q),
+                                                     jnp.asarray([int(d)])))[0]
+            np.testing.assert_allclose(looked, on_fly, atol=1e-5)
+
+    def test_absent_pairs_zero(self, seine_world):
+        w = seine_world
+        absent = np.setdiff1d(np.arange(w["vocab"].size),
+                              np.unique(w["toks"][0]))[:4].astype(np.int32)
+        m = np.asarray(w["index"].qd_matrix(jnp.asarray(absent),
+                                            jnp.asarray([0])))
+        assert (m == 0).all()
+
+    def test_padded_query_terms_zero(self, seine_world):
+        w = seine_world
+        q = np.array([-1, -1, -1], np.int32)
+        m = np.asarray(w["index"].qd_matrix(jnp.asarray(q), jnp.asarray([0])))
+        assert (m == 0).all()
+
+    def test_tf_matches_counting(self, seine_world):
+        w = seine_world
+        idx = w["index"]
+        tf_i = idx.fn_index("tf")
+        d = 7
+        present = np.unique(w["toks"][d][w["toks"][d] >= 0])[:5]
+        m = np.asarray(idx.qd_matrix(jnp.asarray(present.astype(np.int32)),
+                                     jnp.asarray([d])))[0]
+        for qi, term in enumerate(present):
+            true_tf = (w["toks"][d] == term).sum()
+            assert m[qi, :, tf_i].sum() == pytest.approx(true_tf), \
+                f"tf mismatch for term {term}"
+
+    def test_sigma_filter_respected(self, seine_world):
+        # every stored row must have total tf > sigma_index (= 0)
+        idx = w = seine_world["index"]
+        tf = np.asarray(idx.values[..., idx.fn_index("tf")]).sum(-1)
+        assert (tf > seine_world["cfg"].sigma_index).all()
+
+    def test_posting_lists_sorted(self, seine_world):
+        idx = seine_world["index"]
+        offs = np.asarray(idx.term_offsets)
+        docs = np.asarray(idx.doc_ids)
+        for t in np.random.RandomState(0).randint(0, idx.vocab_size, 50):
+            lo, hi = offs[t], offs[t + 1]
+            assert (np.diff(docs[lo:hi]) > 0).all(), "posting list not sorted"
+
+    def test_batched_lookup_matches_single(self, seine_world):
+        idx = seine_world["index"]
+        q = jnp.asarray(np.unique(seine_world["toks"][3])[:4].astype(np.int32))
+        docs = jnp.arange(10)
+        batched = np.asarray(idx.qd_matrix(q, docs))
+        for i in range(10):
+            single = np.asarray(idx.qd_matrix(q, jnp.asarray([i])))[0]
+            np.testing.assert_array_equal(batched[i], single)
+
+
+class TestInteractionProperties:
+    def test_gauss_max_in_unit_interval(self, seine_world):
+        idx = seine_world["index"]
+        g = np.asarray(idx.values[..., idx.fn_index("gauss_max")])
+        assert (g >= 0).all() and (g <= 1.0 + 1e-6).all()
+
+    def test_log_cond_prob_nonpositive(self, seine_world):
+        idx = seine_world["index"]
+        lp = np.asarray(idx.values[..., idx.fn_index("log_cond_prob")])
+        assert (lp <= 1e-5).all()
+
+    def test_dot_scales_with_embeddings(self):
+        """dot(c*E) == c^2 * dot(E) — bilinearity of the atomic function."""
+        from repro.core.interactions import doc_interactions, \
+            init_interaction_params
+        rng = np.random.RandomState(0)
+        tok = jnp.asarray(rng.randint(0, 20, 30).astype(np.int32))
+        seg = jnp.asarray(np.sort(rng.randint(0, 3, 30)).astype(np.int32))
+        uniq = jnp.asarray(np.unique(tok)[:8].astype(np.int32))
+        E = jax.random.normal(jax.random.key(0), (20, 16))
+        ip = init_interaction_params(jax.random.key(1), 16)
+        idf = jnp.ones((20,))
+        ctx = jnp.zeros((30, 16))
+        kw = dict(idf=idf, ctx_emb=ctx, ip=ip, n_b=3, functions=("dot",))
+        v1 = doc_interactions(tok, seg, uniq, table=E, **kw)
+        v2 = doc_interactions(tok, seg, uniq, table=2.0 * E, **kw)
+        np.testing.assert_allclose(np.asarray(v2), 4.0 * np.asarray(v1),
+                                   rtol=1e-5)
