@@ -1,0 +1,85 @@
+"""Distributed-substrate microbenches: gradient-compression throughput
+(int8 vs top-k, with and without error feedback) and the sp-decode
+log-sum-exp merge — the perf baseline future scaling PRs measure against.
+
+    PYTHONPATH=src python -m benchmarks.run --only dist
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+
+def _time(f, *args, reps=5):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list:
+    from repro.dist.compression import (compress_with_feedback,
+                                        dequantize_int8, init_error_feedback,
+                                        quantize_int8, topk_densify,
+                                        topk_sparsify)
+    from repro.dist.sp_decode import combine_decode_stats, local_decode_stats
+
+    rows = []
+    N = 1 << 22                                   # 4M-param gradient leaf
+    g = jax.random.normal(jax.random.key(0), (N,), jnp.float32)
+    nbytes = N * 4
+
+    f_q = jax.jit(lambda x: dequantize_int8(*quantize_int8(x)))
+    dt = _time(f_q, g)
+    rows.append(("dist/int8_roundtrip", dt * 1e6,
+                 f"GBps={nbytes/dt/1e9:.1f}"))
+
+    k = N // 100                                  # top-1%
+    f_t = jax.jit(lambda x: topk_densify(*topk_sparsify(x, k), (N,)))
+    dt = _time(f_t, g)
+    rows.append(("dist/topk1pct_roundtrip", dt * 1e6,
+                 f"GBps={nbytes/dt/1e9:.1f}"))
+
+    tree = {"w": g.reshape(2048, 2048), "b": g[:2048]}
+    res = init_error_feedback(tree)
+    for scheme in ("int8", "topk"):
+        f_c = jax.jit(lambda gr, r: compress_with_feedback(
+            gr, r, scheme=scheme, topk_frac=0.01))
+        dt = _time(f_c, tree, res)
+        rows.append((f"dist/error_feedback_{scheme}", dt * 1e6,
+                     f"GBps={nbytes/dt/1e9:.1f}"))
+
+    # sp-decode merge: 8-shard stats combine for a 32k-token cache slice
+    B, Hq, Hkv, hd, S_loc, shards = 8, 16, 4, 64, 4096, 8
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd))
+    kk = jax.random.normal(ks[1], (B, S_loc, Hkv, hd))
+    vv = jax.random.normal(ks[2], (B, S_loc, Hkv, hd))
+    valid = jnp.ones((B, S_loc), bool)
+    f_l = jax.jit(local_decode_stats)
+    dt = _time(f_l, q, kk, vv, valid)
+    rows.append(("dist/sp_decode_local_stats", dt * 1e6,
+                 f"tok_per_s={B*S_loc/dt:.0f}"))
+
+    m, l, acc = f_l(q, kk, vv, valid)
+    ms = jnp.broadcast_to(m, (shards,) + m.shape)
+    ls = jnp.broadcast_to(l, (shards,) + l.shape)
+    accs = jnp.broadcast_to(acc, (shards,) + acc.shape)
+    f_m = jax.jit(combine_decode_stats)
+    dt = _time(f_m, ms, ls, accs)
+    rows.append(("dist/sp_decode_combine8", dt * 1e6,
+                 f"merge_bytes={int(ms.nbytes+ls.nbytes+accs.nbytes)}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import sys
 import time
 import traceback
 
-SUITES = ("table1", "fig2", "index_build", "kernels", "snrm")
+SUITES = ("table1", "fig2", "index_build", "kernels", "snrm", "dist")
 
 
 def main() -> None:

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entrypoints.
+#
+#   scripts/ci.sh           tier-1 gate: the full suite (what the driver runs)
+#   scripts/ci.sh fast      iteration lane: skip tests marked `slow`
+#                           (heavy per-arch model smokes; ~half the wall time)
+#   scripts/ci.sh bench     dist-substrate perf baseline (compression / sp-decode)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+case "${1:-full}" in
+  full)  exec python -m pytest -x -q ;;
+  fast)  exec python -m pytest -x -q -m "not slow" ;;
+  bench) exec python -m benchmarks.run --only dist ;;
+  *) echo "usage: scripts/ci.sh [full|fast|bench]" >&2; exit 2 ;;
+esac

@@ -1,0 +1,3 @@
+"""SEINE reproduction: segment-based indexing for neural IR, grown into a
+distributed jax system (offline index build / online retrieval split, §2)."""
+from . import _compat  # noqa: F401  (jax API shims; must run before mesh use)

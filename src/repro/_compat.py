@@ -1,0 +1,57 @@
+"""Compatibility shims for the pinned offline jax.
+
+The codebase targets the current jax mesh API (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``).  The offline
+container pins jax 0.4.37, which predates all three.  Rather than fork every
+call site, this module backfills the missing surface with semantically
+equivalent fallbacks:
+
+* ``jax.sharding.AxisType`` — enum placeholder (0.4.x meshes are implicitly
+  Auto, so the value is accepted and ignored).
+* ``jax.make_mesh`` — wrapped to swallow the ``axis_types`` kwarg.
+* ``jax.set_mesh`` — context manager entering the physical mesh (the 0.4.x
+  resource-env equivalent of installing an ambient mesh).
+
+Importing ``repro`` applies the shims once; on a jax that already provides
+the API every branch here is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # signature probe, NOT a trial call — importing repro must never
+    # initialise the jax backend (dryrun.py sets XLA_FLAGS first).
+    import inspect
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _orig_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+
+_install()

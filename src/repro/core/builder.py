@@ -120,18 +120,28 @@ class IndexBuilder:
         """jit'd (query (Q,), tokens (B,Lp), segs (B,Lp)) -> (B,Q,n_b,n_f).
 
         This is the query-time interaction-matrix construction that SEINE
-        replaces with an index lookup; both feed the same scorers."""
+        replaces with an index lookup; both feed the same scorers.  The
+        build-time pruning (Algorithm 1 line 8: keep only pairs with
+        tf > sigma_index) is applied here too — M_{q,d} is *defined* over
+        the surviving pairs, so with sigma = 0 the on-the-fly matrix equals
+        the indexed lookup exactly, absent pairs included (the soft
+        functions 3-9 are nonzero even for terms the doc never mentions,
+        and without this mask the two engines silently diverge)."""
         table = self.provider.table()
         n_b = self.cfg.n_segments
         functions = self.functions
         idf = self._idf
         ip = self.ip
         provider = self.provider
+        sigma = float(self.cfg.sigma_index) if "tf" in self.functions else 0.0
 
         def one(query, tok, seg):
             ctx = provider.contextualize(tok, seg)
-            return doc_interactions(tok, seg, query, table=table, idf=idf,
+            vals = doc_interactions(tok, seg, query, table=table, idf=idf,
                                     ctx_emb=ctx, ip=ip, n_b=n_b,
                                     functions=functions)
+            tf_tot = ((query[:, None] == tok[None, :])
+                      & (tok >= 0)[None, :]).sum(axis=1)
+            return vals * (tf_tot > sigma)[:, None, None]
 
         return jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))

@@ -1,0 +1,40 @@
+"""repro.dist — the distributed-execution substrate.
+
+SEINE's thesis (PAPER.md §2) is an offline/online split: interaction
+computation moves offline into the index, so the system scales by scaling
+the substrate underneath — sharded index build/serving, compressed-gradient
+ranker training, fault-tolerant long runs, sequence-parallel decode.  Each
+module owns one of those axes:
+
+* ``sharding``    — mesh partitioning rules for params / optimizer state /
+                    KV caches / SEINE posting lists (consumed by
+                    launch/steps.py and serving);
+* ``compression`` — int8 / top-k gradient compression with error feedback
+                    (consumed by train/loop.py);
+* ``fault``       — heartbeats, straggler detection, cooperative
+                    preemption, elastic mesh re-planning;
+* ``sp_decode``   — sequence-parallel decode attention via log-sum-exp
+                    merge (the flash_attn kernel's math across devices).
+"""
+from .compression import (compress_with_feedback, dequantize_int8,
+                          init_error_feedback, quantize_int8, topk_densify,
+                          topk_sparsify)
+from .fault import (Heartbeat, PreemptionGuard, StragglerMonitor,
+                    plan_elastic_mesh)
+from .sharding import (data_axes, fit_spec, gnn_param_rules, index_shardings,
+                       lm_cache_spec, lm_param_rules, lm_param_rules_fsdp,
+                       opt_state_shardings, recsys_param_rules, shard_index,
+                       tree_shardings)
+from .sp_decode import (combine_decode_stats, local_decode_stats,
+                        sp_decode_attention)
+
+__all__ = [
+    "compress_with_feedback", "dequantize_int8", "init_error_feedback",
+    "quantize_int8", "topk_densify", "topk_sparsify",
+    "Heartbeat", "PreemptionGuard", "StragglerMonitor", "plan_elastic_mesh",
+    "data_axes", "fit_spec", "gnn_param_rules", "index_shardings",
+    "lm_cache_spec", "lm_param_rules", "lm_param_rules_fsdp",
+    "opt_state_shardings", "recsys_param_rules", "shard_index",
+    "tree_shardings",
+    "combine_decode_stats", "local_decode_stats", "sp_decode_attention",
+]

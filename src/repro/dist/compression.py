@@ -1,0 +1,102 @@
+"""Gradient compression with error feedback (the training-cost side of the
+paper's effectiveness-vs-efficiency tradeoff: rankers train data-parallel,
+and compressed all-reduce is what keeps the gradient exchange off the
+critical path at pod scale).
+
+Two schemes over arbitrary pytrees:
+
+* ``int8`` — symmetric per-leaf quantisation (4x smaller payload);
+* ``topk`` — magnitude sparsification (send the largest ``topk_frac``).
+
+Both are wrapped in error feedback [Seide et al. '14; Karimireddy et al.
+'19]: the residual (what compression dropped) is carried in the train state
+and added back before the next round, so the *sum* of transmitted gradients
+tracks the sum of true gradients — no systematic bias, convergence intact
+(tested in tests/test_train_ckpt_dist.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 quantisation
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32 scalar) with
+    dequant error bounded by scale/2."""
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+def topk_sparsify(x: jnp.ndarray, k: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the k largest-magnitude entries: returns (flat indices, values)."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return idx.astype(jnp.int32), flat[idx]
+
+
+def topk_densify(idx: jnp.ndarray, vals: jnp.ndarray,
+                 shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of topk_sparsify: scatter values back into a zero tensor."""
+    n = 1
+    for d in shape:
+        n *= d
+    return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params: Any) -> Any:
+    """Zero residual buffers, one per param leaf (carried in TrainState)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(x: jnp.ndarray, scheme: str, topk_frac: float
+                   ) -> jnp.ndarray:
+    """Compress-then-decompress one leaf (the value that would be sent)."""
+    if scheme == "int8":
+        return dequantize_int8(*quantize_int8(x))
+    if scheme == "topk":
+        k = max(1, int(x.size * topk_frac))
+        if k >= x.size:
+            return x
+        idx, vals = topk_sparsify(x, k)
+        return topk_densify(idx, vals, x.shape)
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def compress_with_feedback(grads: Any, residual: Any, *, scheme: str = "int8",
+                           topk_frac: float = 0.01) -> Tuple[Any, Any]:
+    """(grads, residual) -> (transmitted, new_residual), per leaf:
+
+        c = g + residual          # add back what was dropped last round
+        t = decompress(compress(c))
+        new_residual = c - t
+    """
+    def leaf(g, r):
+        c = g.astype(jnp.float32) + r
+        t = _compress_leaf(c, scheme, topk_frac)
+        return t, c - t
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([t for t, _ in out]),
+            tdef.unflatten([r for _, r in out]))

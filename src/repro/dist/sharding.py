@@ -1,0 +1,209 @@
+"""Mesh-aware partitioning rules (the offline/online split at pod scale).
+
+SEINE moves the heavy interaction computation offline (§2.3–2.4); what is
+left to scale is pure data movement: parameter layouts for ranker training,
+posting-list placement for index serving, KV-cache layouts for LM-provider
+decode.  This module is the single place those layouts are written down —
+``launch/steps.py`` consumes the rules for every dry-run cell, the train
+loop inherits them through ``opt_state_shardings``, and ``shard_index``
+places a built :class:`~repro.core.index.SegmentInvertedIndex` so engines
+score candidates data-parallel.
+
+Rules are ordered ``(path-regex, PartitionSpec)`` pairs resolved against a
+concrete mesh by :func:`tree_shardings`, with a divisibility guard that
+shrinks or drops axes that do not tile a dimension (so the same rule set is
+valid on a 512-chip pod mesh and on the 1-device host mesh used in tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Rules = Sequence[Tuple[str, P]]
+
+# axes that carry batch parallelism, in shrink-first order (drop 'pod' first)
+_DATA_AXES = ("pod", "data")
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh's batch-parallel axis names, e.g. ('pod', 'data')."""
+    return tuple(a for a in _DATA_AXES if a in mesh.axis_names)
+
+
+def _resolve_entry(mesh: Mesh, entry, dim: int):
+    """Fit one PartitionSpec entry to a dimension: keep only axes present in
+    the mesh, then shrink from the left until the shard count divides ``dim``
+    (same policy as models.layers.maybe_constrain)."""
+    if entry is None:
+        return None
+    axes = [a for a in (entry if isinstance(entry, tuple) else (entry,))
+            if a in mesh.axis_names]
+    while axes:
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if n == 1 or dim % n == 0:
+            break
+        axes.pop(0)
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Clamp ``spec`` to ``shape``: trim to rank, drop non-dividing axes."""
+    entries = [_resolve_entry(mesh, spec[i] if i < len(spec) else None,
+                              shape[i]) for i in range(len(shape))]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(mesh: Mesh, tree: Any, rules: Rules) -> Any:
+    """Map every array leaf to a NamedSharding via the first matching rule.
+
+    Rule patterns are regexes searched against the '/'-joined key path
+    (e.g. ``"layers/wq"``); unmatched leaves are replicated.
+    """
+    compiled = [(re.compile(pat), spec) for pat, spec in rules]
+
+    def assign(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        for pat, spec in compiled:
+            if pat.search(name):
+                return NamedSharding(mesh, fit_spec(mesh, spec, leaf.shape))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+# ---------------------------------------------------------------------------
+# per-family parameter rules
+# ---------------------------------------------------------------------------
+
+def lm_param_rules() -> Rules:
+    """Megatron-style 2D tensor parallelism for the stacked-layer LM params:
+    column-shard the up-projections, row-shard the down-projections, shard
+    the (un)embedding over the vocab dim, expert-shard MoE weights."""
+    return [
+        (r"layers/(wq|wk|wv|w_gate|w_up|ws_gate|ws_up)$", P(None, None, "model")),
+        (r"layers/(wo|w_down|ws_down)$", P(None, "model", None)),
+        (r"layers/(we_gate|we_up|we_down)$", P(None, "model", None, None)),
+        (r"layers/router$", P()),
+        (r"^embed$", P("model", None)),
+        (r"^unembed$", P(None, "model")),
+    ]
+
+
+def lm_param_rules_fsdp() -> Rules:
+    """FSDP: every stacked layer param sharded over the FLAT device grid on
+    its first non-layer dim (gathered per-layer inside the scan body, see
+    models.layers.maybe_replicate); experts keep expert-parallel placement."""
+    flat = ("pod", "data", "model")
+    return [
+        (r"layers/(we_gate|we_up|we_down)$", P(None, "model", None, None)),
+        (r"layers/", P(None, flat)),
+        (r"^embed$", P(flat, None)),
+        (r"^unembed$", P(None, flat)),
+    ]
+
+
+def gnn_param_rules() -> Rules:
+    """GNN (MACE) params are small: replicate everything — the model axis
+    becomes free batch parallelism for nodes/edges (see steps._mace_cell)."""
+    return []                      # no rules -> every leaf replicated
+
+
+def recsys_param_rules() -> Rules:
+    """Recsys: the embedding tables dominate (row-padded to multiples of 512
+    by MultiTable/seqrec_init exactly so they row-shard over the whole grid);
+    the dense towers are tiny and stay replicated."""
+    flat = ("pod", "data", "model")
+    return [
+        (r"(^|/)(table|item_emb)$", P(flat, None)),
+    ]
+
+
+def opt_state_shardings(mesh: Mesh, opt_state: Any, param_shardings: Any
+                        ) -> Any:
+    """Optimizer-state layout: any sub-tree structured like the params
+    (adam's mu/nu, sgd's momentum) inherits the parameter shardings; scalars
+    and factored statistics are replicated."""
+    ptree = jax.tree.structure(param_shardings)
+    rep = NamedSharding(mesh, P())
+
+    def rec(node):
+        if node is None:
+            return None
+        try:
+            if jax.tree.structure(node) == ptree:
+                return param_shardings
+        except Exception:  # noqa: BLE001 — unflattenable node, recurse below
+            pass
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return rep
+
+    return rec(opt_state)
+
+
+def lm_cache_spec(mesh: Mesh, *, seq_shard: bool = True,
+                  batch: int = 1) -> P:
+    """PartitionSpec for the (L, B, S, Hkv, hd) KV cache.
+
+    ``seq_shard=True`` puts the sequence dim on the 'model' axis — the
+    sequence-parallel decode layout whose softmax merge is
+    dist.sp_decode (distributed flash-decoding).  The batch dim rides the
+    data axes only when it divides them (decode batches can be tiny).
+    """
+    da = None
+    if batch > 1:
+        axes = data_axes(mesh)
+        n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and batch % n == 0:
+            da = axes if len(axes) > 1 else axes[0]
+    seq = "model" if seq_shard and "model" in mesh.axis_names else None
+    return P(None, da, seq, None, None)
+
+
+# ---------------------------------------------------------------------------
+# SEINE index placement
+# ---------------------------------------------------------------------------
+
+def index_shardings(mesh: Mesh, index) -> Any:
+    """Shardings for a SegmentInvertedIndex: posting-list values (the bulk
+    of the bytes, nnz x n_b x n_f) shard over the model axis; the CSR
+    skeleton and per-doc stats replicate so every device can resolve
+    (term, doc) -> position locally."""
+    from ..core.index import SegmentInvertedIndex
+    rep = NamedSharding(mesh, P())
+    vals = NamedSharding(
+        mesh, fit_spec(mesh, P("model", None, None), index.values.shape))
+    return SegmentInvertedIndex(
+        term_offsets=rep, doc_ids=rep, values=vals, idf=rep,
+        doc_len=rep, seg_len=rep, n_docs=index.n_docs,
+        vocab_size=index.vocab_size, n_b=index.n_b,
+        functions=index.functions)
+
+
+def shard_index(index, mesh: Mesh):
+    """Place a built SegmentInvertedIndex on ``mesh``.
+
+    Returns a new index whose arrays carry NamedShardings; engines that jit
+    over it (serving.SeineEngine with a mesh) then score candidate batches
+    data-parallel while posting-list lookups stay local.
+    """
+    sh = index_shardings(mesh, index)
+    import dataclasses
+    arrays = {f.name: jax.device_put(getattr(index, f.name),
+                                     getattr(sh, f.name))
+              for f in dataclasses.fields(index)
+              if f.name in ("term_offsets", "doc_ids", "values", "idf",
+                            "doc_len", "seg_len")}
+    return dataclasses.replace(index, **arrays)

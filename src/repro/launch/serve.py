@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--n-queries", type=int, default=16)
     ap.add_argument("--candidates", type=int, default=100)
     ap.add_argument("--compare-noindex", action="store_true")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the index over the host mesh and score "
+                         "candidate batches data-parallel (dist.sharding)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -49,6 +52,15 @@ def main() -> None:
     queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
     rng = np.random.RandomState(args.seed)
     n_cand = min(args.candidates, len(ds.docs))
+    if args.data_parallel:
+        # keep the candidate batch divisible by the device count, else the
+        # engine's divisibility guard silently replicates the whole batch
+        n_dev = len(jax.devices())
+        adj = (n_cand // n_dev) * n_dev or n_cand
+        if adj != n_cand:
+            print(f"[serve] candidates {n_cand} -> {adj} "
+                  f"(multiple of {n_dev} devices)")
+            n_cand = adj
     requests = []
     for i in range(args.n_queries):
         qi = i % len(queries)
@@ -58,7 +70,13 @@ def main() -> None:
     spec = get_retriever(args.retriever)
     params = spec.init(jax.random.key(args.seed), cfg.n_segments,
                        index.functions)
-    engine = SeineEngine(index, args.retriever, params)
+    mesh = None
+    if args.data_parallel:
+        from .mesh import make_host_mesh
+        mesh = make_host_mesh(data=len(jax.devices()))
+        print(f"[serve] data-parallel over {mesh.devices.size} device(s): "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    engine = SeineEngine(index, args.retriever, params, mesh=mesh)
     scores, stats = serve_batches(engine, requests)   # warm + measure
     scores, stats = serve_batches(engine, requests)
     print(f"[serve] SEINE    : {stats.ms_per_request:8.2f} ms/request "

@@ -35,8 +35,19 @@ def make_qmeta(index: SegmentInvertedIndex, query_terms: jnp.ndarray,
 
 
 class SeineEngine:
+    """Indexed scorer.  With ``mesh`` the index is placed via
+    dist.sharding.shard_index (posting-list values on the model axis, CSR
+    skeleton replicated) and candidate batches shard over the data axes, so
+    one score() call runs SPMD across every device."""
+
     def __init__(self, index: SegmentInvertedIndex, retriever: str,
-                 params: Any):
+                 params: Any, *, mesh: Optional[Any] = None):
+        self.mesh = mesh
+        if mesh is not None:
+            from ..dist.sharding import data_axes, shard_index
+            index = shard_index(index, mesh)
+            self._data_axes = data_axes(mesh) or tuple(
+                a for a in mesh.axis_names if a != "model")
         self.index = index
         self.spec = get_retriever(retriever)
         self.params = params
@@ -47,8 +58,24 @@ class SeineEngine:
         meta = make_qmeta(self.index, query_terms, doc_ids)
         return self.spec.score(params, m, meta, self.index.functions)
 
+    def _place(self, query_terms, doc_ids):
+        """Shard candidates over the data axes (fit_spec shrinks/drops axes
+        that don't divide the batch — the repo's one divisibility policy)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from ..dist.sharding import fit_spec
+        spec = fit_spec(self.mesh, P(self._data_axes), doc_ids.shape) \
+            if self._data_axes else P()
+        return (jax.device_put(query_terms, NamedSharding(self.mesh, P())),
+                jax.device_put(doc_ids, NamedSharding(self.mesh, spec)))
+
     def score(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
               ) -> jnp.ndarray:
+        query_terms = jnp.asarray(query_terms)
+        doc_ids = jnp.asarray(doc_ids)
+        if self.mesh is not None:
+            query_terms, doc_ids = self._place(query_terms, doc_ids)
         return self._score(self.params, query_terms, doc_ids)
 
 
@@ -97,9 +124,11 @@ def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
     out = []
     for q, docs in requests:
         t0 = time.perf_counter()
-        s = np.asarray(engine.score(jnp.asarray(q), jnp.asarray(docs)))
-        s_done = jax.block_until_ready(s)
+        # block on the DEVICE array: np.asarray first would force a blocking
+        # host transfer inside the timed region and double-count conversion
+        s = jax.block_until_ready(engine.score(jnp.asarray(q),
+                                               jnp.asarray(docs)))
         stats.total_ms += (time.perf_counter() - t0) * 1e3
         stats.n_requests += 1
-        out.append(np.asarray(s_done))
+        out.append(np.asarray(s))
     return out, stats

@@ -105,6 +105,7 @@ def test_trainable_loss_decreases(seine_world, name):
     assert last <= first + 0.05, f"{name}: loss {first:.3f} -> {last:.3f}"
 
 
+@pytest.mark.slow
 def test_snrm_baseline_trains_and_degrades_lexical_match(seine_world):
     """SNRM's latent matching loses lexical precision (Table 1 finding)."""
     from repro.core import snrm as S
