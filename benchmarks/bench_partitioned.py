@@ -1,0 +1,100 @@
+"""Replicated-skeleton vs term-partitioned index serving.
+
+For K in {1, 2, 4} shards: lookup (qd_matrix) and end-to-end score
+throughput of the PartitionedIndex against the single-CSR baseline, plus
+the capacity story — per-device index bytes, which the replicated-skeleton
+path pins at O(|v| + nnz) per device and term partitioning shrinks ~1/K.
+
+    PYTHONPATH=src python -m benchmarks.run --only partitioned
+
+Also writes ``BENCH_partitioned.json`` next to the repo root so the perf
+trajectory accumulates across PRs (scripts/ci.sh bench).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit
+
+K_SWEEP = (1, 2, 4)
+N_CANDIDATES = 128
+
+
+def _time(f, *args, reps=10):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list:
+    from repro.dist.sharding import partition_index
+    from repro.retrievers import get_retriever
+    from repro.serving import SeineEngine
+
+    w = bench_world()
+    idx = w["index"]
+    q = jnp.asarray(w["queries"][0])
+    docs = jnp.arange(min(N_CANDIDATES, idx.n_docs))
+    spec = get_retriever("knrm")
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+
+    rows = []
+    record = {"nnz": idx.nnz, "vocab": idx.vocab_size,
+              "n_docs": idx.n_docs, "candidates": int(docs.shape[0]),
+              "paths": {}}
+
+    # baseline: single CSR, the replicated-skeleton placement story — every
+    # device would hold term_offsets + doc_ids + stats in full
+    f_base = jax.jit(idx.qd_matrix)
+    dt = _time(f_base, q, docs)
+    base_dt = dt
+    base_bytes = idx.nbytes
+    rows.append(("partitioned/replicated_lookup", dt * 1e6,
+                 f"bytes_per_device={base_bytes}"))
+    eng = SeineEngine(idx, "knrm", params)
+    dt_s = _time(lambda qq, dd: eng.score(qq, dd), q, docs)
+    rows.append(("partitioned/replicated_score", dt_s * 1e6,
+                 f"cand_per_s={docs.shape[0]/dt_s:.0f}"))
+    record["paths"]["replicated"] = {
+        "lookup_us": dt * 1e6, "score_us": dt_s * 1e6,
+        "bytes_per_device": base_bytes}
+
+    for k in K_SWEEP:
+        pidx = partition_index(idx, k)
+        f_p = jax.jit(pidx.qd_matrix)
+        dt = _time(f_p, q, docs)
+        per_dev = pidx.per_device_nbytes
+        rows.append((f"partitioned/term_k{k}_lookup", dt * 1e6,
+                     f"bytes_per_device={per_dev}"))
+        peng = SeineEngine(idx, "knrm", params, partition="term", n_shards=k)
+        dt_s = _time(lambda qq, dd: peng.score(qq, dd), q, docs)
+        rows.append((f"partitioned/term_k{k}_score", dt_s * 1e6,
+                     f"shrink={base_bytes/per_dev:.2f}x"))
+        record["paths"][f"term_k{k}"] = {
+            "lookup_us": dt * 1e6, "score_us": dt_s * 1e6,
+            "bytes_per_device": per_dev,
+            "bytes_shrink_vs_replicated": base_bytes / per_dev}
+
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_partitioned.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    rows.append(("partitioned/json_written", 0.0,
+                 f"path={os.path.abspath(out)}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("table1", "fig2", "index_build", "kernels", "snrm", "dist")
+SUITES = ("table1", "fig2", "index_build", "kernels", "snrm", "dist",
+          "partitioned")
 
 
 def main() -> None:

@@ -2,16 +2,21 @@
 # CI entrypoints.
 #
 #   scripts/ci.sh           tier-1 gate: the full suite (what the driver runs)
-#   scripts/ci.sh fast      iteration lane: skip tests marked `slow`
-#                           (heavy per-arch model smokes; ~half the wall time)
-#   scripts/ci.sh bench     dist-substrate perf baseline (compression / sp-decode)
+#   scripts/ci.sh fast      iteration lane: index-parity harness first (the
+#                           cheapest exactness gate), then everything not
+#                           marked `slow` (heavy per-arch model smokes)
+#   scripts/ci.sh bench     dist-substrate perf baseline (compression /
+#                           sp-decode) + partitioned-index serving; emits
+#                           BENCH_partitioned.json for the perf trajectory
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 case "${1:-full}" in
   full)  exec python -m pytest -x -q ;;
-  fast)  exec python -m pytest -x -q -m "not slow" ;;
-  bench) exec python -m benchmarks.run --only dist ;;
+  fast)  python -m pytest -x -q tests/test_partitioned_index.py
+         exec python -m pytest -x -q -m "not slow" \
+              --ignore=tests/test_partitioned_index.py ;;
+  bench) exec python -m benchmarks.run --only dist,partitioned ;;
   *) echo "usage: scripts/ci.sh [full|fast|bench]" >&2; exit 2 ;;
 esac

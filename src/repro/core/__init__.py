@@ -4,7 +4,8 @@ vocab -> TextTiling segmentation -> atomic interaction functions ->
 segment-level inverted index (+ distributed builder, SNRM baseline).
 """
 from .builder import IndexBuilder, make_batch_interaction_fn, unique_terms_host
-from .index import SegmentInvertedIndex, build_from_rows
+from .index import (PairLookupIndex, SegmentInvertedIndex, build_from_rows,
+                    csr_lookup_positions)
 from .interactions import (FUNCTION_NAMES, doc_interactions,
                            init_interaction_params, query_doc_interactions)
 from .providers import (EmbeddingProvider, HashProvider, LearnedProvider,
@@ -14,7 +15,8 @@ from .vocab import Vocabulary, build_vocabulary
 
 __all__ = [
     "IndexBuilder", "make_batch_interaction_fn", "unique_terms_host",
-    "SegmentInvertedIndex", "build_from_rows", "FUNCTION_NAMES",
+    "PairLookupIndex", "SegmentInvertedIndex", "build_from_rows",
+    "csr_lookup_positions", "FUNCTION_NAMES",
     "doc_interactions", "init_interaction_params", "query_doc_interactions",
     "EmbeddingProvider", "HashProvider", "LearnedProvider", "LMProvider",
     "make_provider", "segment_corpus", "segment_ids", "texttile_boundaries",

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,57 @@ def _bisect(doc_ids: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
         return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
     lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
     return lo
+
+
+def csr_lookup_positions(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                         term_ids: jnp.ndarray, doc_targets: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Random access into one CSR skeleton: ``(term, doc) -> (pos, in_list)``.
+
+    ``term_ids`` must already be valid row indices for ``term_offsets``
+    (clipped / localised by the caller — the global index clips raw query
+    ids, a term-range shard passes shard-local ids).  ``in_list`` is True
+    only where the posting list for the term actually stores ``doc_targets``;
+    callers AND in their own validity masks (padding, ownership).
+    """
+    lo = term_offsets.at[term_ids].get(mode="clip")
+    hi = term_offsets.at[term_ids + 1].get(mode="clip")
+    pos = _bisect(doc_ids, lo, hi, doc_targets)
+    in_list = (pos < hi) & (doc_ids.at[pos].get(mode="clip") == doc_targets)
+    return pos, in_list
+
+
+@runtime_checkable
+class PairLookupIndex(Protocol):
+    """What the serving engine dispatches on (the Eq. 4 lookup contract).
+
+    Any index — the single-CSR :class:`SegmentInvertedIndex` here, the
+    term-range :class:`~repro.dist.partition.PartitionedIndex` — that can
+    materialise M_{q,d} rows (zeros for absent pairs, the sigma=0
+    semantics) plus the per-doc/per-term stats QMeta needs is servable;
+    retrievers never learn which one produced M.
+    """
+    idf: jnp.ndarray           # (|v|,)
+    doc_len: jnp.ndarray       # (n_docs,)
+    seg_len: jnp.ndarray       # (n_docs, n_b)
+    n_docs: int
+    vocab_size: int
+    n_b: int
+    functions: Tuple[str, ...]
+
+    @property
+    def nbytes(self) -> int: ...
+
+    @property
+    def avg_doc_len(self) -> jnp.ndarray: ...
+
+    def fn_index(self, name: str) -> int: ...
+
+    def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
+                     ) -> jnp.ndarray: ...
+
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
+                  ) -> jnp.ndarray: ...
 
 
 @jax.tree_util.register_dataclass
@@ -75,13 +126,10 @@ class SegmentInvertedIndex:
         """term_ids (..., Q), doc_ids broadcastable (...,) ->
         (positions (..., Q), found (..., Q))."""
         w = term_ids.clip(0)
-        lo = self.term_offsets.at[w].get(mode="clip")
-        hi = self.term_offsets.at[w + 1].get(mode="clip")
         d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
-        pos = _bisect(self.doc_ids, lo, hi, d)
-        found = (pos < hi) & (self.doc_ids.at[pos].get(mode="clip") == d) \
-            & (term_ids >= 0)
-        return pos, found
+        pos, in_list = csr_lookup_positions(self.term_offsets, self.doc_ids,
+                                            w, d)
+        return pos, in_list & (term_ids >= 0)
 
     def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
                      ) -> jnp.ndarray:

@@ -9,6 +9,9 @@ module owns one of those axes:
 * ``sharding``    — mesh partitioning rules for params / optimizer state /
                     KV caches / SEINE posting lists (consumed by
                     launch/steps.py and serving);
+* ``partition``   — term-range partitioned index (PartitionedIndex): K
+                    nnz-balanced shards, no replicated CSR skeleton, exact
+                    partial-row merge (built by sharding.partition_index);
 * ``compression`` — int8 / top-k gradient compression with error feedback
                     (consumed by train/loop.py);
 * ``fault``       — heartbeats, straggler detection, cooperative
@@ -21,10 +24,13 @@ from .compression import (compress_with_feedback, dequantize_int8,
                           topk_sparsify)
 from .fault import (Heartbeat, PreemptionGuard, StragglerMonitor,
                     plan_elastic_mesh)
+from .partition import PartitionedIndex
 from .sharding import (data_axes, fit_spec, gnn_param_rules, index_shardings,
                        lm_cache_spec, lm_param_rules, lm_param_rules_fsdp,
-                       opt_state_shardings, recsys_param_rules, shard_index,
-                       tree_shardings)
+                       opt_state_shardings, partition_index,
+                       partitioned_index_shardings, plan_term_ranges,
+                       recsys_param_rules, shard_index,
+                       shard_partitioned_index, tree_shardings)
 from .sp_decode import (combine_decode_stats, local_decode_stats,
                         sp_decode_attention)
 
@@ -32,9 +38,12 @@ __all__ = [
     "compress_with_feedback", "dequantize_int8", "init_error_feedback",
     "quantize_int8", "topk_densify", "topk_sparsify",
     "Heartbeat", "PreemptionGuard", "StragglerMonitor", "plan_elastic_mesh",
+    "PartitionedIndex",
     "data_axes", "fit_spec", "gnn_param_rules", "index_shardings",
     "lm_cache_spec", "lm_param_rules", "lm_param_rules_fsdp",
-    "opt_state_shardings", "recsys_param_rules", "shard_index",
+    "opt_state_shardings", "partition_index",
+    "partitioned_index_shardings", "plan_term_ranges",
+    "recsys_param_rules", "shard_index", "shard_partitioned_index",
     "tree_shardings",
     "combine_decode_stats", "local_decode_stats", "sp_decode_attention",
 ]

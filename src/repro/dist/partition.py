@@ -1,0 +1,147 @@
+"""Term-range partitioned SEINE index (cross-pod index sharding).
+
+``dist.sharding.shard_index`` scales the *values* of a
+:class:`~repro.core.index.SegmentInvertedIndex` across devices but
+replicates the CSR skeleton (``term_offsets`` |v|+1, ``doc_ids`` nnz) on
+every one of them — fine up to ~2^31 nnz per pod, a hard wall past it.
+:class:`PartitionedIndex` removes that last replicated O(|v|+nnz)
+structure: posting lists split into K *contiguous term ranges* balanced by
+nnz (``dist.sharding.plan_term_ranges``), each shard carrying its own
+local ``term_offsets`` / ``doc_ids`` / ``values``, so index capacity
+scales linearly with pod count.  Only two small structures replicate:
+
+  term_to_shard (|v|,)   routing table: global term -> owning shard
+  range_lo      (K,)     term-range starts: global term -> shard-local row
+
+Query time is the classic term-partitioned plan, SPMD-shaped: every shard
+receives the full query, masks the terms it owns, resolves them against
+its local CSR (the same 32-step branchless bisect as the global index, via
+``core.index.csr_lookup_positions``), and emits a *partial* M_{q,d} with
+exact zeros for terms it does not own.  Partial rows merge by summation —
+a psum over the shard axis once the leading K dim is placed on a mesh axis
+(``dist.sharding.shard_partitioned_index``).  Because every (q, d) entry
+is owned by exactly one shard and absent pairs are zeros by construction,
+``x + 0 + ... + 0`` reproduces the single-CSR lookup bit-for-bit: the
+sigma=0 semantics survive partitioning exactly (the oracle-parity harness
+in tests/test_partitioned_index.py holds every lookup path to that).
+
+Shards are padded to common (Vmax+1,) / (Nmax,) widths and *stacked* on a
+leading K axis, so one jitted program serves any K and the XLA partitioner
+turns the merge into an all-reduce when K tiles the mesh's model axis.
+Padding rows are empty posting lists (offsets pinned at the shard's nnz)
+and can never be "found": lookups stay exact whatever the padding holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.index import csr_lookup_positions
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PartitionedIndex:
+    """K term-range shards of a SegmentInvertedIndex, stacked on axis 0."""
+    term_offsets: jnp.ndarray   # (K, Vmax+1) int32, shard-local CSR offsets
+    doc_ids: jnp.ndarray        # (K, Nmax) int32, padded with n_docs
+    values: jnp.ndarray         # (K, Nmax, n_b, n_f) float32, zero-padded
+    term_to_shard: jnp.ndarray  # (|v|,) int32 routing table (replicated)
+    range_lo: jnp.ndarray       # (K,) int32 first global term of each shard
+    idf: jnp.ndarray            # (|v|,)
+    doc_len: jnp.ndarray        # (n_docs,) float32
+    seg_len: jnp.ndarray        # (n_docs, n_b) float32
+    n_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
+    vocab_size: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_b: int = dataclasses.field(metadata=dict(static=True), default=1)
+    n_shards: int = dataclasses.field(metadata=dict(static=True), default=1)
+    functions: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    @property
+    def nnz(self) -> int:
+        """True stored pairs (padding excluded)."""
+        return int(np.asarray(self.term_offsets[:, -1]).sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes across all shards (padding included)."""
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in (self.term_offsets, self.doc_ids, self.values,
+                             self.term_to_shard, self.range_lo, self.idf,
+                             self.doc_len, self.seg_len))
+
+    @property
+    def per_device_nbytes(self) -> int:
+        """Capacity projection: bytes one device holds with the K shards
+        spread over K devices — its 1/K slice of the stacked shard arrays
+        plus every replicated structure (routing table + per-doc stats).
+        For what the *current* placement actually costs per device, use
+        :attr:`placed_per_device_nbytes`."""
+        sharded = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                      for a in (self.term_offsets, self.doc_ids, self.values))
+        replicated = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                         for a in (self.term_to_shard, self.range_lo,
+                                   self.idf, self.doc_len, self.seg_len))
+        return sharded // self.n_shards + replicated
+
+    @property
+    def placed_per_device_nbytes(self) -> int:
+        """Bytes per device under the arrays' *actual* shardings (falls
+        back to full size for unplaced / single-device arrays — e.g. when
+        the mesh's model axis does not tile K and the divisibility guard
+        replicated the stacked shards)."""
+        total = 0
+        for a in (self.term_offsets, self.doc_ids, self.values,
+                  self.term_to_shard, self.range_lo, self.idf,
+                  self.doc_len, self.seg_len):
+            shape = (a.sharding.shard_shape(a.shape)
+                     if hasattr(a, "sharding") else a.shape)
+            total += int(np.prod(shape)) * a.dtype.itemsize
+        return total
+
+    @property
+    def avg_doc_len(self) -> jnp.ndarray:
+        return jnp.mean(self.doc_len)
+
+    def fn_index(self, name: str) -> int:
+        return self.functions.index(name)
+
+    # -- lookups (Eq. 4, term-partitioned) ----------------------------------
+
+    def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
+                     ) -> jnp.ndarray:
+        """(..., Q) term ids x (...,) doc ids -> (..., Q, n_b, n_f).
+
+        Route each term to its owning shard, resolve shard-locally, merge
+        partial rows by sum (zeros for absent pairs / non-owned terms).
+        """
+        w = term_ids.clip(0)
+        d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
+        shard_of = self.term_to_shard.at[w].get(mode="clip")
+        valid = term_ids >= 0
+
+        def partial(offsets_k, docs_k, values_k, lo_k, k):
+            owned = (shard_of == k) & valid
+            local = (w - lo_k).clip(0)
+            pos, in_list = csr_lookup_positions(offsets_k, docs_k, local, d)
+            found = in_list & owned
+            vals = values_k.at[pos].get(mode="clip")
+            return vals * found[..., None, None]
+
+        parts = jax.vmap(partial)(
+            self.term_offsets, self.doc_ids, self.values, self.range_lo,
+            jnp.arange(self.n_shards, dtype=self.term_to_shard.dtype))
+        return parts.sum(axis=0)
+
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
+                  ) -> jnp.ndarray:
+        """query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f)."""
+        q = jnp.broadcast_to(query_terms[None],
+                             (doc_ids.shape[0],) + query_terms.shape)
+        return self.lookup_pairs(q, doc_ids)

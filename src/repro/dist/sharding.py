@@ -20,6 +20,7 @@ import re
 from typing import Any, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -207,3 +208,128 @@ def shard_index(index, mesh: Mesh):
               if f.name in ("term_offsets", "doc_ids", "values", "idf",
                             "doc_len", "seg_len")}
     return dataclasses.replace(index, **arrays)
+
+
+# ---------------------------------------------------------------------------
+# term-range partitioning (cross-pod index sharding)
+# ---------------------------------------------------------------------------
+
+def plan_term_ranges(term_offsets, k: int) -> np.ndarray:
+    """Split the vocabulary into ``k`` contiguous term ranges balanced by
+    nnz (posting-list mass), not vocab count.
+
+    ``term_offsets`` is the global CSR boundary array (|v|+1,) — already
+    the cumulative nnz per term, so the k-quantile cuts are a single
+    searchsorted.  Returns (k+1,) int64 term boundaries with bounds[0]=0,
+    bounds[k]=|v|, monotone non-decreasing (degenerate empty ranges are
+    legal when k exceeds the number of populated terms).
+    """
+    offs = np.asarray(term_offsets, dtype=np.int64)
+    if k < 1:
+        raise ValueError(f"need k >= 1 shards, got {k}")
+    v = len(offs) - 1
+    nnz = int(offs[-1])
+    targets = (np.arange(1, k, dtype=np.int64) * nnz) // k
+    cuts = np.searchsorted(offs, targets, side="left")
+    bounds = np.concatenate([[0], cuts, [v]])
+    return np.maximum.accumulate(bounds).clip(0, v)
+
+
+def partition_index(index, k: int, *, mesh: Mesh = None):
+    """Split a built SegmentInvertedIndex into a K-shard PartitionedIndex.
+
+    Host-side assembly: slice each term range's posting lists, localise its
+    CSR offsets (global term t -> row t - range_lo[shard]), pad every shard
+    to the widest (Vmax+1 offsets, Nmax postings) and stack on a leading K
+    axis.  Padding rows are empty posting lists (offsets pinned at the
+    shard's nnz; doc_ids padded with n_docs, one past any real id) so they
+    can never be "found".  With ``mesh`` the result is placed via
+    :func:`shard_partitioned_index` (shard axis on 'model', routing table
+    and doc stats replicated).
+
+    Balance precondition: a single term's posting list cannot be split, so
+    the padded shard width is at least the longest list.  The ~1/K
+    per-device-bytes scaling therefore assumes max posting-list length <<
+    nnz/k (true once stopword-band terms are filtered by the vocabulary's
+    middle-band keep_frac); a Zipfian hot term that dominates nnz/k makes
+    every shard pad up to it — warned here, sub-splitting hot terms by doc
+    range is the ROADMAP follow-up.
+    """
+    from .partition import PartitionedIndex
+
+    offs = np.asarray(index.term_offsets, dtype=np.int64)
+    docs = np.asarray(index.doc_ids)
+    vals = np.asarray(index.values)
+    bounds = plan_term_ranges(offs, k)
+    spans = np.diff(bounds)
+    local_nnz = offs[bounds[1:]] - offs[bounds[:-1]]
+    vmax = max(int(spans.max()), 1)
+    nmax = max(int(local_nnz.max()), 1)
+    ideal = -(-int(offs[-1]) // k)          # ceil(nnz / k)
+    if k > 1 and nmax > 2 * ideal:
+        import warnings
+        warnings.warn(
+            f"partition_index: skewed posting lists — widest shard holds "
+            f"{nmax} postings vs an even split of {ideal}; padded storage "
+            f"is ~{k * nmax / max(int(offs[-1]), 1):.1f}x nnz and "
+            f"per-device bytes will not shrink ~1/K (hot term dominates; "
+            f"see ROADMAP: sub-split hot terms by doc range)",
+            stacklevel=2)
+
+    term_offsets = np.empty((k, vmax + 1), np.int32)
+    doc_ids = np.full((k, nmax), int(index.n_docs), np.int32)
+    values = np.zeros((k, nmax) + vals.shape[1:], vals.dtype)
+    for i in range(k):
+        t_lo, t_hi = int(bounds[i]), int(bounds[i + 1])
+        n_lo, n_hi = int(offs[t_lo]), int(offs[t_hi])
+        n = n_hi - n_lo
+        span = t_hi - t_lo
+        term_offsets[i, :span + 1] = offs[t_lo:t_hi + 1] - n_lo
+        term_offsets[i, span + 1:] = n
+        doc_ids[i, :n] = docs[n_lo:n_hi]
+        values[i, :n] = vals[n_lo:n_hi]
+    term_to_shard = np.repeat(np.arange(k, dtype=np.int32), spans)
+
+    pidx = PartitionedIndex(
+        term_offsets=jnp.asarray(term_offsets),
+        doc_ids=jnp.asarray(doc_ids),
+        values=jnp.asarray(values),
+        term_to_shard=jnp.asarray(term_to_shard),
+        range_lo=jnp.asarray(bounds[:-1].astype(np.int32)),
+        idf=index.idf, doc_len=index.doc_len, seg_len=index.seg_len,
+        n_docs=index.n_docs, vocab_size=index.vocab_size, n_b=index.n_b,
+        n_shards=int(k), functions=index.functions)
+    if mesh is not None:
+        pidx = shard_partitioned_index(pidx, mesh)
+    return pidx
+
+
+def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:
+    """Placement rules for a PartitionedIndex: the stacked shard arrays
+    split on their leading K axis over 'model' (each device holds only its
+    term-range shards — no global CSR skeleton anywhere); the routing
+    table, range starts and per-doc stats replicate (they are the O(|v|)
+    and O(n_docs) leftovers, not the O(nnz) bulk)."""
+    from .partition import PartitionedIndex
+    rep = NamedSharding(mesh, P())
+    shard0 = lambda a: NamedSharding(
+        mesh, fit_spec(mesh, P("model"), (a.shape[0],)))
+    return PartitionedIndex(
+        term_offsets=shard0(pidx.term_offsets),
+        doc_ids=shard0(pidx.doc_ids), values=shard0(pidx.values),
+        term_to_shard=rep, range_lo=rep, idf=rep, doc_len=rep, seg_len=rep,
+        n_docs=pidx.n_docs, vocab_size=pidx.vocab_size, n_b=pidx.n_b,
+        n_shards=pidx.n_shards, functions=pidx.functions)
+
+
+def shard_partitioned_index(pidx, mesh: Mesh):
+    """Place a PartitionedIndex on ``mesh`` per partitioned_index_shardings;
+    the engine's jitted score then resolves query terms against device-local
+    shards and XLA lowers the partial-row merge to an all-reduce."""
+    import dataclasses
+    sh = partitioned_index_shardings(mesh, pidx)
+    arrays = {f.name: jax.device_put(getattr(pidx, f.name),
+                                     getattr(sh, f.name))
+              for f in dataclasses.fields(pidx)
+              if hasattr(getattr(pidx, f.name), "shape")}
+    return dataclasses.replace(pidx, **arrays)

@@ -4,8 +4,10 @@
         --n-queries 32 --candidates 200 --compare-noindex
 
 Builds the (smoke-scale) index, serves batched requests through both
-engines and reports ms/request — the Table-1 efficiency comparison as a
-service.
+engines and reports mean/p50/p95 ms/request — the Table-1 efficiency
+comparison as a service.  ``--partition term --shards K`` serves through
+the term-range PartitionedIndex (no replicated CSR skeleton) instead of
+the replicated-skeleton shard_index placement.
 """
 from __future__ import annotations
 
@@ -26,6 +28,13 @@ def main() -> None:
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard the index over the host mesh and score "
                          "candidate batches data-parallel (dist.sharding)")
+    ap.add_argument("--partition", choices=["none", "term"], default="none",
+                    help="'term': split posting lists into nnz-balanced "
+                         "term-range shards (PartitionedIndex) instead of "
+                         "replicating the CSR skeleton on every device")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard count for --partition term (default: the "
+                         "mesh model-axis size, or 1 without a mesh)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -76,11 +85,22 @@ def main() -> None:
         mesh = make_host_mesh(data=len(jax.devices()))
         print(f"[serve] data-parallel over {mesh.devices.size} device(s): "
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-    engine = SeineEngine(index, args.retriever, params, mesh=mesh)
+    engine = SeineEngine(
+        index, args.retriever, params, mesh=mesh,
+        partition=None if args.partition == "none" else args.partition,
+        n_shards=args.shards or None)
+    if args.partition == "term":
+        pidx = engine.index
+        print(f"[serve] term-partitioned: {pidx.n_shards} shard(s), "
+              f"{pidx.placed_per_device_nbytes/1e6:.1f} MB/device on this "
+              f"mesh ({pidx.per_device_nbytes/1e6:.1f} MB/device at "
+              f"{pidx.n_shards} devices; replicated-skeleton path: "
+              f"{index.nbytes/1e6:.1f} MB)")
     scores, stats = serve_batches(engine, requests)   # warm + measure
     scores, stats = serve_batches(engine, requests)
     print(f"[serve] SEINE    : {stats.ms_per_request:8.2f} ms/request "
-          f"({args.n_queries} requests x {n_cand} candidates)")
+          f"(p50 {stats.p50_ms:.2f} / p95 {stats.p95_ms:.2f} ms, "
+          f"{args.n_queries} requests x {n_cand} candidates)")
 
     if args.compare_noindex:
         noidx = NoIndexEngine(builder, index, toks, segs, args.retriever,
@@ -88,6 +108,7 @@ def main() -> None:
         _, nstats = serve_batches(noidx, requests)
         _, nstats = serve_batches(noidx, requests)
         print(f"[serve] No-Index : {nstats.ms_per_request:8.2f} ms/request "
+              f"(p50 {nstats.p50_ms:.2f} / p95 {nstats.p95_ms:.2f} ms) "
               f"-> speedup {nstats.ms_per_request/stats.ms_per_request:.1f}x")
 
 

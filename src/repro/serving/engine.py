@@ -10,7 +10,8 @@ serving driver used by launch/serve.py.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -18,11 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.builder import IndexBuilder
-from ..core.index import SegmentInvertedIndex
+from ..core.index import PairLookupIndex, SegmentInvertedIndex
 from ..retrievers import QMeta, get_retriever
 
 
-def make_qmeta(index: SegmentInvertedIndex, query_terms: jnp.ndarray,
+def make_qmeta(index: PairLookupIndex, query_terms: jnp.ndarray,
                doc_ids: jnp.ndarray) -> QMeta:
     return QMeta(
         q_mask=(query_terms >= 0).astype(jnp.float32),
@@ -35,17 +36,40 @@ def make_qmeta(index: SegmentInvertedIndex, query_terms: jnp.ndarray,
 
 
 class SeineEngine:
-    """Indexed scorer.  With ``mesh`` the index is placed via
-    dist.sharding.shard_index (posting-list values on the model axis, CSR
-    skeleton replicated) and candidate batches shard over the data axes, so
-    one score() call runs SPMD across every device."""
+    """Indexed scorer over any :class:`~repro.core.index.PairLookupIndex`.
+
+    With ``mesh`` the index is placed for SPMD serving and candidate
+    batches shard over the data axes, so one score() call runs across
+    every device.  Two placements:
+
+    * default — dist.sharding.shard_index: posting-list values on the
+      model axis, CSR skeleton replicated (capped at ~2^31 nnz/pod);
+    * ``partition="term"`` — dist.sharding.partition_index: the index is
+      split into ``n_shards`` nnz-balanced term-range shards (defaults to
+      the mesh's model-axis size) with no replicated CSR skeleton; query
+      terms route to their owning shard and partial M rows merge exactly.
+      Works without a mesh too (K stacked shards on one device — the
+      configuration the oracle-parity tests sweep).
+    """
 
     def __init__(self, index: SegmentInvertedIndex, retriever: str,
-                 params: Any, *, mesh: Optional[Any] = None):
+                 params: Any, *, mesh: Optional[Any] = None,
+                 partition: Optional[str] = None,
+                 n_shards: Optional[int] = None):
+        if partition not in (None, "term"):
+            raise ValueError(f"unknown partition scheme {partition!r}; "
+                             "supported: 'term'")
         self.mesh = mesh
-        if mesh is not None:
-            from ..dist.sharding import data_axes, shard_index
+        if partition == "term":
+            from ..dist.sharding import partition_index
+            k = n_shards or (mesh and dict(
+                zip(mesh.axis_names, mesh.devices.shape)).get("model")) or 1
+            index = partition_index(index, int(k), mesh=mesh)
+        elif mesh is not None:
+            from ..dist.sharding import shard_index
             index = shard_index(index, mesh)
+        if mesh is not None:
+            from ..dist.sharding import data_axes
             self._data_axes = data_axes(mesh) or tuple(
                 a for a in mesh.axis_names if a != "model")
         self.index = index
@@ -109,12 +133,51 @@ class NoIndexEngine:
 
 @dataclass
 class ServeStats:
-    n_requests: int = 0
-    total_ms: float = 0.0
+    """Per-request latency record.  The mean alone hides tail latency under
+    data-parallel serving (one straggler device stretches every request it
+    shares a batch with), so p50/p95 quantiles are reported alongside it.
+    ``record`` is the single writer: count/total are O(1) running scalars,
+    and ``latencies_ms`` is a deque keeping only the most recent ``window``
+    samples, so a long-lived serving loop gets recent-window quantiles at
+    bounded memory and O(1) per-request cost (a full-history ServeStats
+    would grow forever at production rates)."""
+    latencies_ms: Sequence[float] = field(default_factory=list)
+    window: int = 1 << 16
+    _n: int = 0
+    _total_ms: float = 0.0
+
+    def __post_init__(self):
+        self.latencies_ms = deque(self.latencies_ms, maxlen=self.window)
+
+    def record(self, ms: float) -> None:
+        self._n += 1
+        self._total_ms += ms
+        self.latencies_ms.append(ms)
+
+    @property
+    def n_requests(self) -> int:
+        return self._n
+
+    @property
+    def total_ms(self) -> float:
+        return self._total_ms
 
     @property
     def ms_per_request(self) -> float:
-        return self.total_ms / max(self.n_requests, 1)
+        return self._total_ms / max(self._n, 1)
+
+    def percentile_ms(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_ms), q))
+
+    @property
+    def p50_ms(self) -> float:
+        return self.percentile_ms(50.0)
+
+    @property
+    def p95_ms(self) -> float:
+        return self.percentile_ms(95.0)
 
 
 def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
@@ -128,7 +191,6 @@ def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
         # host transfer inside the timed region and double-count conversion
         s = jax.block_until_ready(engine.score(jnp.asarray(q),
                                                jnp.asarray(docs)))
-        stats.total_ms += (time.perf_counter() - t0) * 1e3
-        stats.n_requests += 1
+        stats.record((time.perf_counter() - t0) * 1e3)
         out.append(np.asarray(s))
     return out, stats

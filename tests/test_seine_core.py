@@ -137,6 +137,61 @@ class TestIndexInvariants:
             np.testing.assert_array_equal(batched[i], single)
 
 
+class TestBisect:
+    """Edge cases of the branchless binary search under the index (the
+    `mode="clip"` gathers make several boundaries easy to get wrong)."""
+
+    def _search(self, docs, lo, hi, target):
+        from repro.core.index import _bisect
+        return int(_bisect(jnp.asarray(docs, jnp.int32),
+                           jnp.asarray(lo, jnp.int32),
+                           jnp.asarray(hi, jnp.int32),
+                           jnp.asarray(target, jnp.int32)))
+
+    def test_empty_posting_list(self):
+        # lo == hi: nothing to search, must return lo untouched
+        docs = np.array([5, 7, 9], np.int32)
+        assert self._search(docs, 2, 2, 7) == 2
+        assert self._search(docs, 0, 0, 5) == 0
+
+    def test_target_below_range(self):
+        docs = np.array([10, 20, 30, 40], np.int32)
+        assert self._search(docs, 1, 4, 3) == 1     # all >= target -> lo
+
+    def test_target_above_range(self):
+        docs = np.array([10, 20, 30, 40], np.int32)
+        assert self._search(docs, 0, 3, 99) == 3    # none >= target -> hi
+
+    def test_exact_hits_and_gaps(self):
+        docs = np.array([2, 4, 8, 16], np.int32)
+        for target, want in [(2, 0), (4, 1), (5, 2), (16, 3), (17, 4)]:
+            assert self._search(docs, 0, 4, target) == want
+
+    def test_list_ending_at_last_slot(self):
+        # posting list occupying [.., nnz): hi == nnz means mid can reach
+        # nnz - 1 and the clip-mode gather must still resolve it
+        docs = np.arange(1, 9, dtype=np.int32) * 3      # nnz == 8
+        nnz = docs.shape[0]
+        assert self._search(docs, 5, nnz, 24) == 7      # last element found
+        assert self._search(docs, 5, nnz, 25) == nnz    # past the end -> hi
+        pos = self._search(docs, nnz, nnz, 1)           # empty tail range
+        assert pos == nnz
+
+    def test_found_flag_respects_clip_boundary(self):
+        """lookup_positions: pos == hi == nnz must read as not-found even
+        though the clipped gather re-reads the last stored doc id."""
+        from repro.core.index import csr_lookup_positions
+        offsets = jnp.asarray([0, 2, 4], jnp.int32)     # 2 terms, nnz = 4
+        docs = jnp.asarray([1, 3, 2, 9], jnp.int32)
+        pos, in_list = csr_lookup_positions(
+            offsets, docs, jnp.asarray([1]), jnp.asarray([10]))
+        assert int(pos[0]) == 4 and not bool(in_list[0])
+        # ...while the genuine last element is found
+        pos, in_list = csr_lookup_positions(
+            offsets, docs, jnp.asarray([1]), jnp.asarray([9]))
+        assert int(pos[0]) == 3 and bool(in_list[0])
+
+
 class TestInteractionProperties:
     def test_gauss_max_in_unit_interval(self, seine_world):
         idx = seine_world["index"]
