@@ -21,6 +21,7 @@ Run with more host devices to see the sharded layout:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/build_index_distributed.py
 """
+import tempfile
 import time
 
 import jax
@@ -30,8 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import seine_smoke
 from repro.core import (HashProvider, IndexBuilder, build_vocabulary,
-                        make_batch_interaction_fn, segment_corpus)
-from repro.core.builder import unique_terms_host
+                        make_batch_interaction_fn, make_unique_terms_fn,
+                        segment_corpus)
 from repro.data.synth_corpus import generate
 
 
@@ -54,11 +55,12 @@ def main() -> None:
                                    builder.ip, cfg.n_segments,
                                    builder.functions)
     B = (len(ds.docs) // n_dev) * n_dev
-    uniq = unique_terms_host(toks[:B], 128)
+    # stage 1 of the streaming pipeline: unique-term extraction, on device
+    uniq = make_unique_terms_fn(128)(jnp.asarray(toks[:B]))
     shard = NamedSharding(mesh, P("data", None))
     with jax.set_mesh(mesh):
         args = [jax.device_put(jnp.asarray(a), shard)
-                for a in (toks[:B], segs[:B], uniq)]
+                for a in (toks[:B], segs[:B], np.asarray(uniq))]
         t0 = time.perf_counter()
         vals = jax.block_until_ready(fn(*args))
         dt = time.perf_counter() - t0
@@ -66,11 +68,14 @@ def main() -> None:
           f"({B/dt:.0f} docs/s), output {vals.shape} "
           f"sharded as {vals.sharding.spec if hasattr(vals, 'sharding') else '-'}")
 
-    # full build (host assembly of posting lists)
-    t0 = time.perf_counter()
-    index = builder.build(toks, segs, batch_size=max(16, B // 4))
-    print(f"full index build: nnz={index.nnz} in "
-          f"{time.perf_counter()-t0:.1f}s")
+    # full streaming build: device filter/compaction -> term-sorted runs
+    # spilled to disk -> merged; resident host bytes stay bounded by one
+    # per-batch run, not total nnz
+    with tempfile.TemporaryDirectory() as spill:
+        index = builder.build(toks, segs, batch_size=max(16, B // 4),
+                              spill_dir=spill)
+    print(f"full streaming build: nnz={index.nnz}; "
+          f"{builder.last_build_stats.summary()}")
 
     # place the posting lists on the mesh and serve data-parallel; the
     # engine runs dist.sharding.shard_index internally, so the index is
@@ -97,13 +102,19 @@ def main() -> None:
           f"{dt*1e3:.1f} ms/query, scores sharded as "
           f"{getattr(scores.sharding, 'spec', '-')}")
 
-    # term-partitioned placement: one shard per device on a model-axis
-    # mesh, so no device holds the global CSR skeleton; scores stay
-    # bitwise-identical (tests/test_partitioned_index.py)
+    # term-partitioned, shard-native: the builder emits term-range shards
+    # DIRECTLY from the streamed runs (no host ever assembles the global
+    # doc_ids/values CSR), one shard per device on a model-axis mesh;
+    # scores stay bitwise-identical (tests/test_build_pipeline.py)
     part_mesh = jax.make_mesh((1, n_dev), ("data", "model"),
                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    part = SeineEngine(index, "knrm", params, mesh=part_mesh,
-                       partition="term", n_shards=max(n_dev, 2))
+    with tempfile.TemporaryDirectory() as spill:
+        pidx_built = builder.build_partitioned(
+            toks, segs, max(n_dev, 2), batch_size=max(16, B // 4),
+            spill_dir=spill)
+    print(f"shard-native build: {builder.last_build_stats.summary()}")
+    part = SeineEngine(pidx_built, "knrm", params, mesh=part_mesh,
+                       partition="term")
     pidx = part.index
     print(f"term-partitioned index: {pidx.n_shards} nnz-balanced shards, "
           f"{pidx.placed_per_device_nbytes/1e6:.2f} MB/device placed vs "

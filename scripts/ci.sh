@@ -2,21 +2,26 @@
 # CI entrypoints.
 #
 #   scripts/ci.sh           tier-1 gate: the full suite (what the driver runs)
-#   scripts/ci.sh fast      iteration lane: index-parity harness first (the
-#                           cheapest exactness gate), then everything not
-#                           marked `slow` (heavy per-arch model smokes)
+#   scripts/ci.sh fast      iteration lane: build-parity + index-parity
+#                           harnesses first (the cheapest exactness gates),
+#                           then everything not marked `slow` (heavy
+#                           per-arch model smokes)
 #   scripts/ci.sh bench     dist-substrate perf baseline (compression /
-#                           sp-decode) + partitioned-index serving; emits
-#                           BENCH_partitioned.json for the perf trajectory
+#                           sp-decode) + partitioned-index serving + legacy-
+#                           vs-streaming index build; emits
+#                           BENCH_partitioned.json and BENCH_build.json for
+#                           the perf trajectory
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 case "${1:-full}" in
   full)  exec python -m pytest -x -q ;;
-  fast)  python -m pytest -x -q tests/test_partitioned_index.py
+  fast)  python -m pytest -x -q tests/test_build_pipeline.py \
+              tests/test_partitioned_index.py
          exec python -m pytest -x -q -m "not slow" \
+              --ignore=tests/test_build_pipeline.py \
               --ignore=tests/test_partitioned_index.py ;;
-  bench) exec python -m benchmarks.run --only dist,partitioned ;;
+  bench) exec python -m benchmarks.run --only dist,partitioned,index_build ;;
   *) echo "usage: scripts/ci.sh [full|fast|bench]" >&2; exit 2 ;;
 esac

@@ -3,9 +3,14 @@
 vocab -> TextTiling segmentation -> atomic interaction functions ->
 segment-level inverted index (+ distributed builder, SNRM baseline).
 """
+from .build_pipeline import (BuildPipeline, BuildStats, PostingRun,
+                             RunSpiller, compute_doc_seg_lengths,
+                             make_compact_rows_fn, make_unique_terms_fn)
 from .builder import IndexBuilder, make_batch_interaction_fn, unique_terms_host
-from .index import (PairLookupIndex, SegmentInvertedIndex, build_from_rows,
-                    csr_lookup_positions)
+from .index import (PairLookupIndex, SegmentInvertedIndex,
+                    build_from_rows, build_shard_from_runs,
+                    csr_lookup_positions, merge_run_parts,
+                    shard_csr_from_runs)
 from .interactions import (FUNCTION_NAMES, doc_interactions,
                            init_interaction_params, query_doc_interactions)
 from .providers import (EmbeddingProvider, HashProvider, LearnedProvider,
@@ -14,9 +19,14 @@ from .segment import segment_corpus, segment_ids, texttile_boundaries
 from .vocab import Vocabulary, build_vocabulary
 
 __all__ = [
+    "BuildPipeline", "BuildStats", "PostingRun", "RunSpiller",
+    "compute_doc_seg_lengths", "make_compact_rows_fn",
+    "make_unique_terms_fn",
     "IndexBuilder", "make_batch_interaction_fn", "unique_terms_host",
     "PairLookupIndex", "SegmentInvertedIndex", "build_from_rows",
-    "csr_lookup_positions", "FUNCTION_NAMES",
+    "build_shard_from_runs", "csr_lookup_positions", "merge_run_parts",
+    "shard_csr_from_runs",
+    "FUNCTION_NAMES",
     "doc_interactions", "init_interaction_params", "query_doc_interactions",
     "EmbeddingProvider", "HashProvider", "LearnedProvider", "LMProvider",
     "make_provider", "segment_corpus", "segment_ids", "texttile_boundaries",

@@ -13,6 +13,14 @@ Spark op -> TPU-native equivalent (DESIGN.md §2):
 The device pass is a single jit'd, vmap'd function; under a mesh it runs
 SPMD with documents sharded (shard_map-equivalent by in_shardings), which is
 the same communication pattern Spark's shuffle-free cartesian enjoys.
+
+``IndexBuilder.build`` is now a thin wrapper over the staged streaming
+pipeline (``core.build_pipeline.BuildPipeline``): unique-term extraction,
+the tf>sigma filter and row compaction all run on device, per-batch
+term-sorted runs spill through ``RunSpiller``, and the index is merged
+from runs — same signature, bitwise-identical output.  The original
+host-list path survives as :meth:`IndexBuilder.build_legacy`, the parity
+oracle and benchmark baseline.
 """
 from __future__ import annotations
 
@@ -68,11 +76,53 @@ class IndexBuilder:
         self.ip = ip if ip is not None else init_interaction_params(
             jax.random.key(17), provider.embed_dim)
         self._idf = jnp.asarray(vocab.idf)
+        self.last_build_stats = None   # BuildStats of the most recent build
+
+    def _pipeline(self):
+        from .build_pipeline import BuildPipeline
+        return BuildPipeline(self.cfg, self.vocab, self.provider,
+                             ip=self.ip, functions=self.functions)
 
     def build(self, tokens: np.ndarray, seg_ids: np.ndarray, *,
               batch_size: int = 32, max_uniq: Optional[int] = None,
-              verbose: bool = False) -> SegmentInvertedIndex:
-        """tokens/seg_ids: (n_docs, Lp) from segment.segment_corpus."""
+              verbose: bool = False,
+              spill_dir: Optional[str] = None) -> SegmentInvertedIndex:
+        """tokens/seg_ids: (n_docs, Lp) from segment.segment_corpus.
+
+        Thin wrapper over the staged streaming pipeline (same signature as
+        the legacy host build, bitwise-identical output; ``spill_dir``
+        additionally bounds resident host bytes by one per-batch run).
+        Telemetry lands in ``self.last_build_stats``.
+        """
+        index, stats = self._pipeline().build_index(
+            tokens, seg_ids, batch_size=batch_size, max_uniq=max_uniq,
+            spill_dir=spill_dir, verbose=verbose)
+        self.last_build_stats = stats
+        return index
+
+    def build_partitioned(self, tokens: np.ndarray, seg_ids: np.ndarray,
+                          k: int, *, batch_size: int = 32,
+                          max_uniq: Optional[int] = None,
+                          spill_dir: Optional[str] = None,
+                          verbose: bool = False, mesh=None):
+        """Shard-native build: K term-range shards straight from the
+        streamed runs — the global doc_ids/values CSR is never
+        materialised on this host.  Returns a PartitionedIndex."""
+        pidx, stats = self._pipeline().build_partitioned(
+            tokens, seg_ids, k, batch_size=batch_size, max_uniq=max_uniq,
+            spill_dir=spill_dir, verbose=verbose, mesh=mesh)
+        self.last_build_stats = stats
+        return pidx
+
+    def build_legacy(self, tokens: np.ndarray, seg_ids: np.ndarray, *,
+                     batch_size: int = 32, max_uniq: Optional[int] = None,
+                     verbose: bool = False) -> SegmentInvertedIndex:
+        """The original host-bound build: per-doc ``np.flatnonzero`` row
+        filtering into host lists, then one global CSR materialisation.
+        Kept as the parity oracle (tests/test_build_pipeline.py) and the
+        benchmark baseline (benchmarks/bench_index_build.py) — peak host
+        memory here is O(total nnz), which is exactly what the streaming
+        pipeline removes."""
         n_docs, Lp = tokens.shape
         n_b = self.cfg.n_segments
         max_uniq = max_uniq or min(Lp, 512)
@@ -103,10 +153,8 @@ class IndexBuilder:
             if verbose and (s // batch_size) % 16 == 0:
                 print(f"  built {e}/{n_docs} docs "
                       f"({(time.perf_counter()-t0):.1f}s)")
-        doc_len = (tokens >= 0).sum(1).astype(np.float32)
-        seg_len = np.zeros((n_docs, n_b), np.float32)
-        for b in range(n_b):
-            seg_len[:, b] = ((seg_ids == b) & (tokens >= 0)).sum(1)
+        from .build_pipeline import compute_doc_seg_lengths
+        doc_len, seg_len = compute_doc_seg_lengths(tokens, seg_ids, n_b)
         return build_from_rows(
             np.concatenate(rows_d), np.concatenate(rows_t),
             np.concatenate(rows_v).astype(np.float32),

@@ -149,6 +149,101 @@ class SegmentInvertedIndex:
         return self.lookup_pairs(q, doc_ids)
 
 
+def merge_run_parts(parts: list, t_lo: int, t_hi: int, *, n_b: int,
+                    n_f: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Merge ``[(term_ids, doc_ids, values), ...]`` slices — each already
+    (term, doc)-sorted and restricted to ``[t_lo, t_hi)`` — into one local
+    CSR: ``(term_offsets (span+1,) int32, doc_ids (n,) int32, values
+    (n, n_b, n_f) float32)`` with offsets localised to the range.
+
+    Rows lexsort by (term, doc), the same order :func:`build_from_rows`
+    produces, which is what keeps the streamed build bitwise-equal to the
+    legacy one; a single part skips the sort outright (it is already
+    ordered — the partition_index compatibility path, one run per index,
+    hits this for every shard).
+    """
+    span = t_hi - t_lo
+    if len(parts) == 1:
+        t = parts[0][0].astype(np.int64) - t_lo
+        d, v = parts[0][1], parts[0][2]
+    elif parts:
+        t = np.concatenate([p[0] for p in parts]).astype(np.int64)
+        d = np.concatenate([p[1] for p in parts])
+        v = np.concatenate([p[2] for p in parts])
+        order = np.lexsort((d, t))
+        t, d, v = t[order] - t_lo, d[order], v[order]
+    else:
+        t = np.zeros(0, np.int64)
+        d = np.zeros(0, np.int32)
+        v = np.zeros((0, n_b, n_f), np.float32)
+    counts = np.bincount(t, minlength=max(span, 1))[:max(span, 1)]
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    # asarray, not astype: no copy when the dtype already matches (the
+    # values payload is the bulk of the bytes; callers copy into padded /
+    # device arrays anyway)
+    return offsets, np.asarray(d, np.int32), np.asarray(v, np.float32)
+
+
+def shard_csr_from_runs(runs, t_lo: int, t_hi: int, *, n_b: int, n_f: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One term range's local CSR from term-sorted runs (one disk pass).
+
+    Each run contributes a contiguous searchsorted slice — copied for
+    spilled runs, so host memory is O(range nnz) plus one loaded run,
+    never the global posting space.  Assembling MANY ranges at once
+    should instead slice every range per run load
+    (``dist.partition.partitioned_from_runs`` does) so spilled runs are
+    read once, not once per shard.
+    """
+    parts = []
+    for run in runs:
+        spilled = getattr(run, "term_ids", None) is None
+        t, d, v = run.load()
+        lo = int(np.searchsorted(t, t_lo, side="left"))
+        hi = int(np.searchsorted(t, t_hi, side="left"))
+        if hi > lo:
+            sl = (t[lo:hi], d[lo:hi], v[lo:hi])
+            parts.append(tuple(a.copy() for a in sl) if spilled else sl)
+    return merge_run_parts(parts, t_lo, t_hi, n_b=n_b, n_f=n_f)
+
+
+def build_shard_from_runs(runs, t_lo: int, t_hi: int, *, idf: np.ndarray,
+                          doc_len: np.ndarray, seg_len: np.ndarray,
+                          n_docs: int, vocab_size: int, n_b: int,
+                          functions: Tuple[str, ...]
+                          ) -> SegmentInvertedIndex:
+    """Assemble ONE term-range shard's local CSR from term-sorted runs.
+
+    ``runs``: objects with ``load() -> (term_ids, doc_ids, values)`` where
+    ``term_ids`` is ascending (build_pipeline.PostingRun).  Only the rows
+    with ``t_lo <= term < t_hi`` are touched — each run contributes a
+    contiguous slice found by searchsorted, so assembling shard ``k``
+    needs the runs plus O(shard nnz) host memory, never the global CSR
+    (this is the per-pod unit of work of the shard-native build).
+
+    The result is a self-contained index over the *local* term range:
+    ``term_offsets`` has ``t_hi - t_lo + 1`` rows, ``idf`` is sliced, and
+    ``vocab_size`` is the span.  With ``(0, |v|)`` this is exactly the
+    global index — the compatibility path ``IndexBuilder.build`` uses —
+    and rows sort by (term, doc) exactly like :func:`build_from_rows`
+    (stable lexsort; one row per (term, doc) pair, so the order — and the
+    bits — match the legacy host build).
+    """
+    offsets, d, v = shard_csr_from_runs(runs, t_lo, t_hi, n_b=n_b,
+                                        n_f=len(functions))
+    span = t_hi - t_lo
+    return SegmentInvertedIndex(
+        term_offsets=jnp.asarray(offsets),
+        doc_ids=jnp.asarray(d.astype(np.int32)),
+        values=jnp.asarray(v.astype(np.float32)),
+        idf=jnp.asarray(np.asarray(idf)[t_lo:t_hi].astype(np.float32)),
+        doc_len=jnp.asarray(np.asarray(doc_len).astype(np.float32)),
+        seg_len=jnp.asarray(np.asarray(seg_len).astype(np.float32)),
+        n_docs=int(n_docs), vocab_size=int(span), n_b=int(n_b),
+        functions=tuple(functions),
+    )
+
+
 def build_from_rows(doc_ids: np.ndarray, term_ids: np.ndarray,
                     values: np.ndarray, *, idf: np.ndarray,
                     doc_len: np.ndarray, seg_len: np.ndarray,

@@ -24,7 +24,8 @@ from .compression import (compress_with_feedback, dequantize_int8,
                           topk_sparsify)
 from .fault import (Heartbeat, PreemptionGuard, StragglerMonitor,
                     plan_elastic_mesh)
-from .partition import PartitionedIndex
+from .partition import (PartitionedIndex, merged_term_counts,
+                        partitioned_from_runs)
 from .sharding import (data_axes, fit_spec, gnn_param_rules, index_shardings,
                        lm_cache_spec, lm_param_rules, lm_param_rules_fsdp,
                        opt_state_shardings, partition_index,
@@ -38,7 +39,7 @@ __all__ = [
     "compress_with_feedback", "dequantize_int8", "init_error_feedback",
     "quantize_int8", "topk_densify", "topk_sparsify",
     "Heartbeat", "PreemptionGuard", "StragglerMonitor", "plan_elastic_mesh",
-    "PartitionedIndex",
+    "PartitionedIndex", "merged_term_counts", "partitioned_from_runs",
     "data_axes", "fit_spec", "gnn_param_rules", "index_shardings",
     "lm_cache_spec", "lm_param_rules", "lm_param_rules_fsdp",
     "opt_state_shardings", "partition_index",

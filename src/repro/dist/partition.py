@@ -34,14 +34,15 @@ and can never be "found": lookups stay exact whatever the padding holds.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.index import csr_lookup_positions
+from ..core.index import csr_lookup_positions, merge_run_parts
 
 
 @jax.tree_util.register_dataclass
@@ -145,3 +146,134 @@ class PartitionedIndex:
         q = jnp.broadcast_to(query_terms[None],
                              (doc_ids.shape[0],) + query_terms.shape)
         return self.lookup_pairs(q, doc_ids)
+
+
+# ---------------------------------------------------------------------------
+# shard-native assembly from term-sorted posting runs (the streaming build)
+# ---------------------------------------------------------------------------
+
+def merged_term_counts(runs: Sequence, vocab_size: int) -> np.ndarray:
+    """Global postings per term, (|v|,) int64, accumulated run-by-run.
+
+    This is the only full-vocabulary structure the shard-native build ever
+    materialises on a host — O(|v|), the same order as the replicated
+    ``term_to_shard`` routing table, never O(nnz).
+    """
+    counts = np.zeros(vocab_size, np.int64)
+    for run in runs:
+        counts += run.term_counts(vocab_size)
+    return counts
+
+
+def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
+                          doc_len: np.ndarray, seg_len: np.ndarray,
+                          n_docs: int, vocab_size: int, n_b: int,
+                          functions: Tuple[str, ...],
+                          mesh=None) -> "PartitionedIndex":
+    """Assemble a K-shard PartitionedIndex directly from term-sorted runs.
+
+    The stage-4 merger of the streaming build (core.build_pipeline): per-
+    term counts accumulate run-by-run into the global CSR *boundary* array
+    (O(|v|) — the skeleton's doc_ids/values, the O(nnz) bulk, are never
+    concatenated globally), ``plan_term_ranges`` cuts it into K nnz-
+    balanced term ranges, and each shard's local CSR is merged
+    independently from the runs via
+    :func:`~repro.core.index.shard_csr_from_runs` — the per-pod unit of
+    work at production scale.  Padding/stacking semantics are identical to
+    the legacy ``partition_index`` (offsets pinned at the shard's nnz,
+    doc_ids padded with ``n_docs``, zero values), and ``partition_index``
+    itself is now a compatibility wrapper over this merger, so both paths
+    produce bitwise-identical shards.
+    """
+    from .sharding import plan_term_ranges, shard_partitioned_index
+
+    counts = merged_term_counts(runs, vocab_size)
+    # guard (shared by every build path, incl. shard-native): K beyond the
+    # populated term ranges would mint zero-nnz shards whose padding still
+    # K-multiplies the stacked arrays — clamp with a warning instead
+    n_pop = int(np.count_nonzero(counts))
+    if k > max(n_pop, 1):
+        warnings.warn(
+            f"partitioned_from_runs: k={k} exceeds the {n_pop} populated "
+            f"term range(s); clamping to {max(n_pop, 1)} to avoid "
+            f"zero-nnz shards", stacklevel=2)
+        k = max(n_pop, 1)
+    offs = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    bounds = plan_term_ranges(offs, k)
+    # repair degenerate quantile cuts: with k <= populated terms, every
+    # range can (and must) own at least one populated term — a skewed
+    # distribution (one hot list swallowing several quantile targets)
+    # otherwise yields zero-nnz shards whose padding still K-multiplies
+    # the stacked arrays.  Left clamp gives range i-1 its first populated
+    # term; right clamp leaves k-i populated terms for the ranges after
+    # the cut.  Both clamps are no-ops for plans that are already valid,
+    # so balanced quantile cuts pass through untouched.
+    pop = np.flatnonzero(counts)
+    if k > 1 and pop.size >= k:
+        for i in range(1, k):
+            nxt = int(np.searchsorted(pop, bounds[i - 1]))
+            lo_min = int(pop[nxt]) + 1
+            hi_max = int(pop[pop.size - (k - i)])
+            bounds[i] = min(max(int(bounds[i]), lo_min), hi_max)
+    spans = np.diff(bounds)
+    local_nnz = offs[bounds[1:]] - offs[bounds[:-1]]
+    vmax = max(int(spans.max()), 1)
+    nmax = max(int(local_nnz.max()), 1)
+    ideal = -(-int(offs[-1]) // k)          # ceil(nnz / k)
+    if k > 1 and nmax > 2 * ideal:
+        warnings.warn(
+            f"partitioned_from_runs: skewed posting lists — widest shard "
+            f"holds {nmax} postings vs an even split of {ideal}; padded "
+            f"storage is ~{k * nmax / max(int(offs[-1]), 1):.1f}x nnz and "
+            f"per-device bytes will not shrink ~1/K (hot term dominates; "
+            f"see ROADMAP: sub-split hot terms by doc range)",
+            stacklevel=2)
+
+    n_f = len(functions)
+    # ONE pass over the runs: slice every shard's term range per loaded
+    # run (a spilled run's npz is read once, not once per shard).  Spilled
+    # runs get copied slices so each loaded payload is released before the
+    # next load — resident overhead stays one run above the output arrays;
+    # resident runs keep views (copying would only double memory, the
+    # source arrays live on regardless — the partition_index compat path).
+    parts: list = [[] for _ in range(k)]
+    for run in runs:
+        spilled = getattr(run, "term_ids", None) is None
+        t, d, v = run.load()
+        cuts = np.searchsorted(t, bounds)
+        for i in range(k):
+            lo, hi = int(cuts[i]), int(cuts[i + 1])
+            if hi > lo:
+                sl = (t[lo:hi], d[lo:hi], v[lo:hi])
+                parts[i].append(tuple(a.copy() for a in sl)
+                                if spilled else sl)
+    term_offsets = np.empty((k, vmax + 1), np.int32)
+    doc_ids = np.full((k, nmax), int(n_docs), np.int32)
+    values = np.zeros((k, nmax, n_b, n_f), np.float32)
+    for i in range(k):
+        t_lo, t_hi = int(bounds[i]), int(bounds[i + 1])
+        span = t_hi - t_lo
+        loc_offs, loc_docs, loc_vals = merge_run_parts(
+            parts[i], t_lo, t_hi, n_b=n_b, n_f=n_f)
+        parts[i] = None                 # free as each shard lands
+        n = int(loc_docs.shape[0])
+        term_offsets[i, :span + 1] = loc_offs[:span + 1]
+        term_offsets[i, span + 1:] = n
+        doc_ids[i, :n] = loc_docs
+        values[i, :n] = loc_vals
+    term_to_shard = np.repeat(np.arange(k, dtype=np.int32), spans)
+
+    pidx = PartitionedIndex(
+        term_offsets=jnp.asarray(term_offsets),
+        doc_ids=jnp.asarray(doc_ids),
+        values=jnp.asarray(values),
+        term_to_shard=jnp.asarray(term_to_shard),
+        range_lo=jnp.asarray(bounds[:-1].astype(np.int32)),
+        idf=jnp.asarray(np.asarray(idf).astype(np.float32)),
+        doc_len=jnp.asarray(np.asarray(doc_len).astype(np.float32)),
+        seg_len=jnp.asarray(np.asarray(seg_len).astype(np.float32)),
+        n_docs=int(n_docs), vocab_size=int(vocab_size), n_b=int(n_b),
+        n_shards=int(k), functions=tuple(functions))
+    if mesh is not None:
+        pidx = shard_partitioned_index(pidx, mesh)
+    return pidx

@@ -238,12 +238,20 @@ def plan_term_ranges(term_offsets, k: int) -> np.ndarray:
 def partition_index(index, k: int, *, mesh: Mesh = None):
     """Split a built SegmentInvertedIndex into a K-shard PartitionedIndex.
 
-    Host-side assembly: slice each term range's posting lists, localise its
-    CSR offsets (global term t -> row t - range_lo[shard]), pad every shard
-    to the widest (Vmax+1 offsets, Nmax postings) and stack on a leading K
-    axis.  Padding rows are empty posting lists (offsets pinned at the
-    shard's nnz; doc_ids padded with n_docs, one past any real id) so they
-    can never be "found".  With ``mesh`` the result is placed via
+    COMPATIBILITY PATH over the streaming merger: the global CSR is viewed
+    as one fully-sorted posting run and handed to
+    :func:`~repro.dist.partition.partitioned_from_runs` — the same stage-4
+    merger the shard-native build
+    (:meth:`~repro.core.build_pipeline.BuildPipeline.build_partitioned`)
+    uses on spilled per-batch runs, so both paths produce bitwise-identical
+    shards (padding rows are empty posting lists: offsets pinned at the
+    shard's nnz, doc_ids padded with n_docs, one past any real id — they
+    can never be "found").  Cost of the shared-path framing: a transient
+    term-id expansion the size of ``doc_ids`` (nnz x 4 bytes int32, freed
+    on return) plus per-shard int64 localisation of the term slice; the
+    doc_ids/values payload is NOT duplicated — resident-run slices stay
+    views and a lone (term, doc)-ordered run skips re-sorting.  With
+    ``mesh`` the result is placed via
     :func:`shard_partitioned_index` (shard axis on 'model', routing table
     and doc stats replicated).
 
@@ -252,56 +260,22 @@ def partition_index(index, k: int, *, mesh: Mesh = None):
     per-device-bytes scaling therefore assumes max posting-list length <<
     nnz/k (true once stopword-band terms are filtered by the vocabulary's
     middle-band keep_frac); a Zipfian hot term that dominates nnz/k makes
-    every shard pad up to it — warned here, sub-splitting hot terms by doc
-    range is the ROADMAP follow-up.
+    every shard pad up to it — warned by the merger, sub-splitting hot
+    terms by doc range is the ROADMAP follow-up.
     """
-    from .partition import PartitionedIndex
+    from ..core.build_pipeline import PostingRun
+    from .partition import partitioned_from_runs
 
     offs = np.asarray(index.term_offsets, dtype=np.int64)
-    docs = np.asarray(index.doc_ids)
-    vals = np.asarray(index.values)
-    bounds = plan_term_ranges(offs, k)
-    spans = np.diff(bounds)
-    local_nnz = offs[bounds[1:]] - offs[bounds[:-1]]
-    vmax = max(int(spans.max()), 1)
-    nmax = max(int(local_nnz.max()), 1)
-    ideal = -(-int(offs[-1]) // k)          # ceil(nnz / k)
-    if k > 1 and nmax > 2 * ideal:
-        import warnings
-        warnings.warn(
-            f"partition_index: skewed posting lists — widest shard holds "
-            f"{nmax} postings vs an even split of {ideal}; padded storage "
-            f"is ~{k * nmax / max(int(offs[-1]), 1):.1f}x nnz and "
-            f"per-device bytes will not shrink ~1/K (hot term dominates; "
-            f"see ROADMAP: sub-split hot terms by doc range)",
-            stacklevel=2)
-
-    term_offsets = np.empty((k, vmax + 1), np.int32)
-    doc_ids = np.full((k, nmax), int(index.n_docs), np.int32)
-    values = np.zeros((k, nmax) + vals.shape[1:], vals.dtype)
-    for i in range(k):
-        t_lo, t_hi = int(bounds[i]), int(bounds[i + 1])
-        n_lo, n_hi = int(offs[t_lo]), int(offs[t_hi])
-        n = n_hi - n_lo
-        span = t_hi - t_lo
-        term_offsets[i, :span + 1] = offs[t_lo:t_hi + 1] - n_lo
-        term_offsets[i, span + 1:] = n
-        doc_ids[i, :n] = docs[n_lo:n_hi]
-        values[i, :n] = vals[n_lo:n_hi]
-    term_to_shard = np.repeat(np.arange(k, dtype=np.int32), spans)
-
-    pidx = PartitionedIndex(
-        term_offsets=jnp.asarray(term_offsets),
-        doc_ids=jnp.asarray(doc_ids),
-        values=jnp.asarray(values),
-        term_to_shard=jnp.asarray(term_to_shard),
-        range_lo=jnp.asarray(bounds[:-1].astype(np.int32)),
-        idf=index.idf, doc_len=index.doc_len, seg_len=index.seg_len,
-        n_docs=index.n_docs, vocab_size=index.vocab_size, n_b=index.n_b,
-        n_shards=int(k), functions=index.functions)
-    if mesh is not None:
-        pidx = shard_partitioned_index(pidx, mesh)
-    return pidx
+    run = PostingRun.from_arrays(
+        np.repeat(np.arange(len(offs) - 1, dtype=np.int32), np.diff(offs)),
+        np.asarray(index.doc_ids), np.asarray(index.values))
+    return partitioned_from_runs(
+        [run], k, idf=np.asarray(index.idf),
+        doc_len=np.asarray(index.doc_len),
+        seg_len=np.asarray(index.seg_len), n_docs=index.n_docs,
+        vocab_size=index.vocab_size, n_b=index.n_b,
+        functions=index.functions, mesh=mesh)
 
 
 def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:

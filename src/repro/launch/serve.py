@@ -12,7 +12,6 @@ the replicated-skeleton shard_index placement.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +34,14 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="shard count for --partition term (default: the "
                          "mesh model-axis size, or 1 without a mesh)")
+    ap.add_argument("--batch-pad", type=int, default=0,
+                    help="pad candidate sets to multiples of this bucket "
+                         "size before scoring (avoids one jit recompile "
+                         "per distinct candidate-set shape)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="spill per-batch posting runs to this directory "
+                         "during the build (bounds resident host bytes by "
+                         "one run instead of total nnz)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,10 +60,17 @@ def main() -> None:
     toks, segs = segment_corpus(slot_docs, cfg.n_segments, max_len=160)
     provider = HashProvider(vocab.size, cfg.embed_dim, seed=args.seed)
     builder = IndexBuilder(cfg, vocab, provider)
-    t0 = time.time()
-    index = builder.build(toks, segs, batch_size=16)
+    if args.partition == "term":
+        # shard-native streaming build: the index is born partitioned —
+        # no host ever materialises the global doc_ids/values CSR
+        index = builder.build_partitioned(
+            toks, segs, args.shards or 1, batch_size=16,
+            spill_dir=args.spill_dir)
+    else:
+        index = builder.build(toks, segs, batch_size=16,
+                              spill_dir=args.spill_dir)
     print(f"[serve] index built: nnz={index.nnz} "
-          f"({index.nbytes/1e6:.1f} MB) in {time.time()-t0:.1f}s")
+          f"({index.nbytes/1e6:.1f} MB); {builder.last_build_stats.summary()}")
 
     queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
     rng = np.random.RandomState(args.seed)
@@ -70,6 +84,14 @@ def main() -> None:
             print(f"[serve] candidates {n_cand} -> {adj} "
                   f"(multiple of {n_dev} devices)")
             n_cand = adj
+        if args.batch_pad and args.batch_pad % n_dev:
+            # a bucket size that doesn't tile the device count would pad
+            # requests to non-divisible shapes and undo the data-parallel
+            # placement the lines above just preserved
+            adj_pad = -(-args.batch_pad // n_dev) * n_dev
+            print(f"[serve] batch-pad {args.batch_pad} -> {adj_pad} "
+                  f"(multiple of {n_dev} devices)")
+            args.batch_pad = adj_pad
     requests = []
     for i in range(args.n_queries):
         qi = i % len(queries)
@@ -91,13 +113,15 @@ def main() -> None:
         n_shards=args.shards or None)
     if args.partition == "term":
         pidx = engine.index
-        print(f"[serve] term-partitioned: {pidx.n_shards} shard(s), "
+        print(f"[serve] term-partitioned (shard-native build): "
+              f"{pidx.n_shards} shard(s), "
               f"{pidx.placed_per_device_nbytes/1e6:.1f} MB/device on this "
               f"mesh ({pidx.per_device_nbytes/1e6:.1f} MB/device at "
-              f"{pidx.n_shards} devices; replicated-skeleton path: "
-              f"{index.nbytes/1e6:.1f} MB)")
-    scores, stats = serve_batches(engine, requests)   # warm + measure
-    scores, stats = serve_batches(engine, requests)
+              f"{pidx.n_shards} devices; total {pidx.nbytes/1e6:.1f} MB)")
+    scores, stats = serve_batches(engine, requests,
+                                  batch_pad=args.batch_pad)  # warm + measure
+    scores, stats = serve_batches(engine, requests,
+                                  batch_pad=args.batch_pad)
     print(f"[serve] SEINE    : {stats.ms_per_request:8.2f} ms/request "
           f"(p50 {stats.p50_ms:.2f} / p95 {stats.p95_ms:.2f} ms, "
           f"{args.n_queries} requests x {n_cand} candidates)")
@@ -105,8 +129,8 @@ def main() -> None:
     if args.compare_noindex:
         noidx = NoIndexEngine(builder, index, toks, segs, args.retriever,
                               params)
-        _, nstats = serve_batches(noidx, requests)
-        _, nstats = serve_batches(noidx, requests)
+        _, nstats = serve_batches(noidx, requests, batch_pad=args.batch_pad)
+        _, nstats = serve_batches(noidx, requests, batch_pad=args.batch_pad)
         print(f"[serve] No-Index : {nstats.ms_per_request:8.2f} ms/request "
               f"(p50 {nstats.p50_ms:.2f} / p95 {nstats.p95_ms:.2f} ms) "
               f"-> speedup {nstats.ms_per_request/stats.ms_per_request:.1f}x")

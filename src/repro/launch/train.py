@@ -39,7 +39,10 @@ def train_seine_ranker(retriever: str, steps: int, ckpt_dir, *, seed=0,
     toks, segs = segment_corpus(slot_docs, cfg.n_segments, max_len=160)
     provider = HashProvider(vocab.size, cfg.embed_dim, seed=seed)
     builder = IndexBuilder(cfg, vocab, provider)
+    # streaming staged build (core.build_pipeline) behind the old signature
     index = builder.build(toks, segs, batch_size=16)
+    if verbose:
+        print(f"[train] index: {builder.last_build_stats.summary()}")
     queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
     spec = get_retriever(retriever)
     params = spec.init(jax.random.key(seed), cfg.n_segments, index.functions)

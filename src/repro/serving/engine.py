@@ -49,10 +49,16 @@ class SeineEngine:
       the mesh's model-axis size) with no replicated CSR skeleton; query
       terms route to their owning shard and partial M rows merge exactly.
       Works without a mesh too (K stacked shards on one device — the
-      configuration the oracle-parity tests sweep).
+      configuration the oracle-parity tests sweep).  ``n_shards`` is
+      clamped (with a warning) to the number of populated term ranges so
+      tiny vocabularies never ship zero-nnz shards.
+
+    A pre-built :class:`~repro.dist.partition.PartitionedIndex` (from the
+    shard-native ``IndexBuilder.build_partitioned``) is served as-is —
+    only mesh placement is applied.
     """
 
-    def __init__(self, index: SegmentInvertedIndex, retriever: str,
+    def __init__(self, index: PairLookupIndex, retriever: str,
                  params: Any, *, mesh: Optional[Any] = None,
                  partition: Optional[str] = None,
                  n_shards: Optional[int] = None):
@@ -60,11 +66,21 @@ class SeineEngine:
             raise ValueError(f"unknown partition scheme {partition!r}; "
                              "supported: 'term'")
         self.mesh = mesh
-        if partition == "term":
+        from ..dist.partition import PartitionedIndex
+        if isinstance(index, PartitionedIndex):
+            # born-sharded (builder.build_partitioned): use it as-is
+            if mesh is not None:
+                from ..dist.sharding import shard_partitioned_index
+                index = shard_partitioned_index(index, mesh)
+        elif partition == "term":
             from ..dist.sharding import partition_index
-            k = n_shards or (mesh and dict(
-                zip(mesh.axis_names, mesh.devices.shape)).get("model")) or 1
-            index = partition_index(index, int(k), mesh=mesh)
+            k = int(n_shards or (mesh and dict(
+                zip(mesh.axis_names, mesh.devices.shape)).get("model")) or 1)
+            # K beyond the populated term ranges is clamped (with a
+            # warning) by the merger itself — partitioned_from_runs, the
+            # single guard every build path shares — so tiny vocabularies
+            # never ship zero-nnz shards
+            index = partition_index(index, k, mesh=mesh)
         elif mesh is not None:
             from ..dist.sharding import shard_index
             index = shard_index(index, mesh)
@@ -182,15 +198,39 @@ class ServeStats:
 
 def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
                   batch_pad: int = 0) -> Tuple[List[np.ndarray], ServeStats]:
-    """requests: list of (query_terms (Q,), candidate_doc_ids (B,))."""
+    """requests: list of (query_terms (Q,), candidate_doc_ids (B,)).
+
+    ``batch_pad > 0`` pads every candidate set up to the next multiple of
+    ``batch_pad`` (bucketing) before scoring and slices the pad scores
+    off the result.  The engine's score fn is jit'd per candidate-set
+    SHAPE, so without bucketing a production stream recompiles once per
+    distinct candidate count — e.g. 32 requests with candidate counts
+    drawn from [50, 200) hit ~32 distinct shapes = ~32 compiles, where
+    ``batch_pad=64`` buckets them into {64, 128, 192} = 3 compiles (and a
+    fixed candidate workload stays at exactly 1, as
+    tests/test_build_pipeline.py asserts via ``_score._cache_size()``).
+    Pad ids re-use candidate 0 — any valid doc id scores safely; the
+    padded rows are dropped before returning, so results are identical to
+    the unpadded call.  Under a data-parallel mesh pick ``batch_pad`` as
+    a multiple of the device count, otherwise the padded batch stops
+    tiling the data axes and the engine's divisibility guard silently
+    replicates it (launch/serve.py rounds ``--batch-pad`` up for you).
+    """
     stats = ServeStats()
     out = []
     for q, docs in requests:
+        docs = np.asarray(docs)
+        n = docs.shape[0]
+        if batch_pad > 0 and n % batch_pad:
+            m = -(-n // batch_pad) * batch_pad
+            pad_id = docs[0] if n else 0
+            docs = np.concatenate(
+                [docs, np.full(m - n, pad_id, docs.dtype)])
         t0 = time.perf_counter()
         # block on the DEVICE array: np.asarray first would force a blocking
         # host transfer inside the timed region and double-count conversion
         s = jax.block_until_ready(engine.score(jnp.asarray(q),
                                                jnp.asarray(docs)))
         stats.record((time.perf_counter() - t0) * 1e3)
-        out.append(np.asarray(s))
+        out.append(np.asarray(s)[:n])
     return out, stats

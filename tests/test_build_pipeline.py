@@ -1,0 +1,429 @@
+"""Streaming-build parity harness (ISSUE 3).
+
+The legacy host-bound ``IndexBuilder.build_legacy`` is the oracle: the
+staged device pipeline (unique-term extraction, on-device tf>sigma filter
++ row compaction, spilled term-sorted runs, k-way shard merge) must
+reproduce it EXACTLY — ``rtol=0, atol=0`` — as a K=1 merged index, and as
+a K-shard PartitionedIndex assembled from spilled runs, for K in {1,2,4}
+x the four indexed retrievers.  Per-shard checkpoint save -> load must
+round-trip to the same arrays, spilling must bound resident host bytes by
+one per-batch run, and the serving satellites (candidate-bucket padding,
+shard-count clamp, ServeStats windowing) are held here too.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import load_index, load_index_shard, save_index
+from repro.core import (BuildPipeline, IndexBuilder,
+                        compute_doc_seg_lengths, make_unique_terms_fn,
+                        unique_terms_host)
+from repro.core.index import SegmentInvertedIndex, build_from_rows
+from repro.dist.partition import (PartitionedIndex, merged_term_counts,
+                                  partitioned_from_runs)
+from repro.dist.sharding import partition_index
+from repro.retrievers import get_retriever
+from repro.serving import SeineEngine, ServeStats, serve_batches
+
+K_SWEEP = (1, 2, 4)
+RETRIEVERS = ("knrm", "deeptilebars", "hint", "deepimpact")
+
+INDEX_FIELDS = ("term_offsets", "doc_ids", "values", "idf", "doc_len",
+                "seg_len")
+PART_FIELDS = INDEX_FIELDS + ("term_to_shard", "range_lo")
+
+
+def assert_indexes_bitwise(a, b, fields):
+    for f in fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.shape == y.shape, f"{f}: {x.shape} vs {y.shape}"
+        np.testing.assert_array_equal(x, y, err_msg=f)
+
+
+@pytest.fixture(scope="module")
+def legacy_index(seine_world):
+    w = seine_world
+    return w["builder"].build_legacy(w["toks"], w["segs"], batch_size=16)
+
+
+@pytest.fixture(scope="module")
+def spilled(seine_world, tmp_path_factory):
+    """Spilled term-sorted runs + doc stats from the staged pipeline."""
+    w = seine_world
+    pipe = BuildPipeline(w["cfg"], w["vocab"], w["provider"],
+                         ip=w["builder"].ip)
+    spill_dir = str(tmp_path_factory.mktemp("runs"))
+    spiller, stats = pipe.stream_runs(w["toks"], w["segs"], batch_size=16,
+                                      spill_dir=spill_dir)
+    doc_len, seg_len = compute_doc_seg_lengths(w["toks"], w["segs"],
+                                               w["cfg"].n_segments)
+    return dict(spiller=spiller, stats=stats, doc_len=doc_len,
+                seg_len=seg_len, spill_dir=spill_dir)
+
+
+def _from_runs(w, spilled, k, mesh=None):
+    return partitioned_from_runs(
+        spilled["spiller"].runs, k, idf=w["vocab"].idf,
+        doc_len=spilled["doc_len"], seg_len=spilled["seg_len"],
+        n_docs=w["toks"].shape[0], vocab_size=w["vocab"].size,
+        n_b=w["cfg"].n_segments, functions=w["builder"].functions,
+        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: device-side unique-term extraction
+# ---------------------------------------------------------------------------
+
+class TestUniqueTermsDevice:
+    def test_matches_host_on_corpus(self, seine_world):
+        toks = seine_world["toks"]
+        got = np.asarray(make_unique_terms_fn(64)(jnp.asarray(toks)))
+        np.testing.assert_array_equal(got, unique_terms_host(toks, 64))
+
+    def test_edge_cases(self):
+        toks = np.array([
+            [-1, -1, -1, -1, -1, -1],      # all pad
+            [3, 3, 3, 3, 3, 3],            # single repeated term
+            [5, 1, 5, -1, 2, 1],           # dups + pad interleaved
+            [0, 9, 8, 7, 6, 5],            # all distinct, capacity overflow
+        ], np.int32)
+        for max_uniq in (2, 4, 8):
+            got = np.asarray(
+                make_unique_terms_fn(max_uniq)(jnp.asarray(toks)))
+            np.testing.assert_array_equal(
+                got, unique_terms_host(toks, max_uniq),
+                err_msg=f"max_uniq={max_uniq}")
+
+
+# ---------------------------------------------------------------------------
+# vectorised doc/segment lengths (satellite: seg_len einsum/bincount pass)
+# ---------------------------------------------------------------------------
+
+class TestDocSegLengths:
+    def test_matches_loop_reference(self, seine_world):
+        toks, segs = seine_world["toks"], seine_world["segs"]
+        n_b = seine_world["cfg"].n_segments
+        doc_len, seg_len = compute_doc_seg_lengths(toks, segs, n_b)
+        ref_dl = (toks >= 0).sum(1).astype(np.float32)
+        ref_sl = np.zeros((toks.shape[0], n_b), np.float32)
+        for b in range(n_b):
+            ref_sl[:, b] = ((segs == b) & (toks >= 0)).sum(1)
+        np.testing.assert_array_equal(doc_len, ref_dl)
+        np.testing.assert_array_equal(seg_len, ref_sl)
+        assert doc_len.dtype == seg_len.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# THE parity bar: streamed-and-merged == legacy host build, bitwise
+# ---------------------------------------------------------------------------
+
+class TestStreamingBuildParity:
+    def test_wrapper_build_is_streaming_and_bitwise_equal(
+            self, seine_world, legacy_index):
+        """seine_world['index'] comes from the new IndexBuilder.build
+        wrapper (the streaming pipeline) — it must equal the legacy
+        host-CSR build bit-for-bit."""
+        assert seine_world["builder"].last_build_stats is not None
+        assert_indexes_bitwise(seine_world["index"], legacy_index,
+                               INDEX_FIELDS)
+
+    def test_spilled_runs_cover_all_postings(self, seine_world, spilled):
+        counts = merged_term_counts(spilled["spiller"].runs,
+                                    seine_world["vocab"].size)
+        offs = np.asarray(seine_world["index"].term_offsets, np.int64)
+        np.testing.assert_array_equal(counts, np.diff(offs))
+
+    def test_partitioned_from_spilled_runs_bitwise(
+            self, seine_world, spilled, legacy_index):
+        """Acceptance harness: PartitionedIndex assembled from spilled
+        runs == partition_index(legacy_build(...)), K in {1,2,4}."""
+        for k in K_SWEEP:
+            got = _from_runs(seine_world, spilled, k)
+            ref = partition_index(legacy_index, k)
+            assert got.n_shards == ref.n_shards == k
+            assert_indexes_bitwise(got, ref, PART_FIELDS)
+
+    def test_retriever_scores_bitwise(self, seine_world, spilled,
+                                      legacy_index):
+        """K in {1,2,4} x {knrm, deeptilebars, hint, deepimpact}: scores
+        through the shard-native index == the legacy single-CSR engine,
+        rtol=0 atol=0."""
+        w = seine_world
+        docs = jnp.arange(16)
+        pidxs = {k: _from_runs(w, spilled, k) for k in K_SWEEP}
+        for retriever in RETRIEVERS:
+            spec = get_retriever(retriever)
+            params = spec.init(jax.random.key(0), legacy_index.n_b,
+                               legacy_index.functions)
+            oracle = SeineEngine(legacy_index, retriever, params)
+            ref = [np.asarray(oracle.score(jnp.asarray(q), docs))
+                   for q in w["queries"][:2]]
+            for k in K_SWEEP:
+                eng = SeineEngine(pidxs[k], retriever, params)
+                for i, q in enumerate(w["queries"][:2]):
+                    np.testing.assert_allclose(
+                        np.asarray(eng.score(jnp.asarray(q), docs)),
+                        ref[i], rtol=0, atol=0,
+                        err_msg=f"{retriever} K={k} query {i}")
+
+    def test_builder_build_partitioned_entry(self, seine_world, spilled,
+                                             tmp_path):
+        """The public shard-native entry re-streams and matches the
+        module-scoped runs' assembly."""
+        w = seine_world
+        pidx = w["builder"].build_partitioned(
+            w["toks"], w["segs"], 2, batch_size=16,
+            spill_dir=str(tmp_path))
+        st = w["builder"].last_build_stats
+        assert st.spilled_bytes == st.total_nnz_bytes > 0
+        assert_indexes_bitwise(pidx, _from_runs(w, spilled, 2),
+                               PART_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: the spill layer bounds resident host memory
+# ---------------------------------------------------------------------------
+
+class TestSpillLayer:
+    def test_spill_bounds_resident_bytes(self, spilled):
+        sp, st = spilled["spiller"], spilled["stats"]
+        assert st.n_batches > 1
+        # every run went to disk: nothing stays resident...
+        assert sp.resident_bytes == 0
+        assert all(r.term_ids is None and r.path is not None
+                   for r in sp.runs)
+        # ...so peak host bytes == the largest single per-batch run,
+        # strictly below the total posting bytes a host build would hold
+        assert st.peak_host_bytes == max(st.run_bytes)
+        assert st.peak_host_bytes < st.total_nnz_bytes
+        assert st.spilled_bytes == st.total_nnz_bytes
+
+    def test_in_memory_runs_track_peak(self, seine_world):
+        w = seine_world
+        pipe = BuildPipeline(w["cfg"], w["vocab"], w["provider"],
+                             ip=w["builder"].ip)
+        sp, st = pipe.stream_runs(w["toks"][:32], w["segs"][:32],
+                                  batch_size=16)
+        assert sp.resident_bytes == st.total_nnz_bytes
+        assert st.peak_host_bytes == st.total_nnz_bytes
+        assert st.spilled_bytes == 0
+
+    def test_run_load_roundtrip(self, spilled):
+        run = spilled["spiller"].runs[0]
+        t, d, v = run.load()
+        assert t.shape == d.shape and v.shape[0] == t.shape[0]
+        assert (np.diff(t) >= 0).all()          # term-sorted
+        # doc ascending within term (stable doc-major compaction)
+        same_term = np.diff(t) == 0
+        assert (np.diff(d)[same_term] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# per-shard index checkpointing
+# ---------------------------------------------------------------------------
+
+class TestIndexCheckpoint:
+    def test_segment_index_roundtrip(self, seine_world, tmp_path):
+        idx = seine_world["index"]
+        path = save_index(str(tmp_path / "idx"), idx)
+        back = load_index(path)
+        assert isinstance(back, SegmentInvertedIndex)
+        assert back.n_docs == idx.n_docs
+        assert back.vocab_size == idx.vocab_size
+        assert back.functions == idx.functions
+        assert_indexes_bitwise(back, idx, INDEX_FIELDS)
+
+    def test_partitioned_index_roundtrip(self, seine_world, spilled,
+                                         tmp_path):
+        pidx = _from_runs(seine_world, spilled, 4)
+        path = save_index(str(tmp_path / "pidx"), pidx)
+        back = load_index(path)
+        assert isinstance(back, PartitionedIndex)
+        assert back.n_shards == 4
+        assert back.functions == pidx.functions
+        assert_indexes_bitwise(back, pidx, PART_FIELDS)
+
+    def test_single_shard_restore(self, seine_world, spilled, tmp_path):
+        """One pod restores ONLY its term-range shard's file."""
+        pidx = _from_runs(seine_world, spilled, 4)
+        path = save_index(str(tmp_path / "pidx"), pidx)
+        for k in range(4):
+            s = load_index_shard(path, k)
+            np.testing.assert_array_equal(
+                s["term_offsets"], np.asarray(pidx.term_offsets[k]))
+            np.testing.assert_array_equal(
+                s["doc_ids"], np.asarray(pidx.doc_ids[k]))
+            np.testing.assert_array_equal(
+                s["values"], np.asarray(pidx.values[k]))
+
+    def test_overwrite_is_atomic(self, seine_world, tmp_path):
+        idx = seine_world["index"]
+        path = save_index(str(tmp_path / "idx"), idx)
+        path = save_index(path, idx)            # second publish replaces
+        assert_indexes_bitwise(load_index(path), idx, INDEX_FIELDS)
+
+    def test_load_recovers_stranded_overwrite(self, seine_world, tmp_path):
+        """A writer preempted mid-overwrite leaves the previous index at
+        <dir>.old<pid>; load_index falls back to it."""
+        import os
+        idx = seine_world["index"]
+        path = save_index(str(tmp_path / "idx"), idx)
+        os.replace(path, path + ".old1234")     # the crash-window state
+        assert_indexes_bitwise(load_index(path), idx, INDEX_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# serving satellites
+# ---------------------------------------------------------------------------
+
+def _tiny_index(n_terms_populated=3, vocab=6, n_docs=8):
+    rng = np.random.RandomState(0)
+    doc_ids, term_ids = [], []
+    for t in range(n_terms_populated):
+        d = np.sort(rng.choice(n_docs, size=3, replace=False))
+        doc_ids.append(d)
+        term_ids.append(np.full(3, t, np.int64))
+    doc_ids = np.concatenate(doc_ids)
+    term_ids = np.concatenate(term_ids)
+    vals = rng.rand(len(doc_ids), 2, 3).astype(np.float32)
+    return build_from_rows(
+        doc_ids, term_ids, vals, idf=np.ones(vocab, np.float32),
+        doc_len=np.full(n_docs, 6.0, np.float32),
+        seg_len=np.full((n_docs, 2), 3.0, np.float32),
+        n_docs=n_docs, vocab_size=vocab, functions=("tf", "b", "c"))
+
+
+class TestShardClampGuard:
+    def test_clamps_excess_shards_with_warning(self):
+        idx = _tiny_index(n_terms_populated=3)
+        plain = SeineEngine(idx, "bm25", {})
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            eng = SeineEngine(idx, "bm25", {}, partition="term",
+                              n_shards=8)
+        assert any("zero-nnz shards" in str(w.message) for w in caught)
+        assert eng.index.n_shards == 3
+        # no shard is empty, and scores stay exact after the clamp
+        assert (np.asarray(eng.index.term_offsets)[:, -1] > 0).all()
+        q = jnp.asarray(np.array([0, 2, 5, -1], np.int32))
+        docs = jnp.arange(8)
+        np.testing.assert_array_equal(np.asarray(eng.score(q, docs)),
+                                      np.asarray(plain.score(q, docs)))
+
+    def test_shard_native_path_clamps_too(self):
+        """The guard lives in the merger, so the shard-native build path
+        (partition_index / partitioned_from_runs / build_partitioned)
+        cannot mint zero-nnz shards either — not just the engine."""
+        idx = _tiny_index(n_terms_populated=3)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            p = partition_index(idx, 8)
+        assert any("zero-nnz shards" in str(w.message) for w in caught)
+        assert p.n_shards == 3
+        assert (np.asarray(p.term_offsets)[:, -1] > 0).all()
+        q = jnp.asarray(np.array([0, 1, 2, -1], np.int32))
+        docs = jnp.arange(8)
+        np.testing.assert_array_equal(np.asarray(p.qd_matrix(q, docs)),
+                                      np.asarray(idx.qd_matrix(q, docs)))
+
+    def test_skewed_counts_never_mint_empty_shards(self):
+        """A hot term swallowing several quantile targets used to leave
+        degenerate empty ranges even with enough populated terms; the
+        merger repairs the cuts so every shard owns >= 1 populated term
+        whenever K <= populated terms — and lookups stay exact."""
+        rng = np.random.RandomState(1)
+        n_docs, vocab = 32, 12
+        doc_ids = [np.arange(n_docs)]            # term 0: posts everywhere
+        term_ids = [np.zeros(n_docs, np.int64)]
+        for t in (3, 7, 11):                     # three sparse terms
+            doc_ids.append(np.sort(rng.choice(n_docs, 2, replace=False)))
+            term_ids.append(np.full(2, t, np.int64))
+        doc_ids, term_ids = np.concatenate(doc_ids), np.concatenate(term_ids)
+        vals = rng.rand(len(doc_ids), 2, 3).astype(np.float32)
+        idx = build_from_rows(
+            doc_ids, term_ids, vals, idf=np.ones(vocab, np.float32),
+            doc_len=np.full(n_docs, 6.0, np.float32),
+            seg_len=np.full((n_docs, 2), 3.0, np.float32),
+            n_docs=n_docs, vocab_size=vocab, functions=("tf", "b", "c"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")      # skew warning expected
+            p = partition_index(idx, 4)          # 4 populated terms, K=4
+        assert p.n_shards == 4
+        assert (np.asarray(p.term_offsets)[:, -1] > 0).all()  # no empties
+        q = jnp.asarray(np.array([0, 3, 7, 11, 5, -1], np.int32))
+        docs = jnp.arange(n_docs)
+        np.testing.assert_array_equal(np.asarray(p.qd_matrix(q, docs)),
+                                      np.asarray(idx.qd_matrix(q, docs)))
+
+    def test_no_warning_when_k_fits(self, seine_world):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            eng = SeineEngine(seine_world["index"], "bm25", {},
+                              partition="term", n_shards=2)
+        assert not any("zero-nnz shards" in str(w.message) for w in caught)
+        assert eng.index.n_shards == 2
+
+
+class TestBatchPadBucketing:
+    def test_scores_identical_and_one_compile(self, seine_world):
+        w = seine_world
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), w["index"].n_b,
+                           w["index"].functions)
+        reqs = [(w["queries"][i % len(w["queries"])],
+                 np.arange(n, dtype=np.int32))
+                for i, n in enumerate((5, 9, 13, 9))]
+
+        eng_pad = SeineEngine(w["index"], "knrm", params)
+        padded, _ = serve_batches(eng_pad, reqs, batch_pad=16)
+        eng_raw = SeineEngine(w["index"], "knrm", params)
+        raw, _ = serve_batches(eng_raw, reqs)
+
+        for p, r, (_, docs) in zip(padded, raw, reqs):
+            assert p.shape == (docs.shape[0],)
+            np.testing.assert_array_equal(p, r)
+        if hasattr(eng_pad._score, "_cache_size"):
+            # one bucket shape {16} vs one compile per distinct count
+            assert eng_pad._score._cache_size() == 1
+            assert eng_raw._score._cache_size() == 3
+
+    def test_zero_pad_is_passthrough(self, seine_world):
+        w = seine_world
+        eng = SeineEngine(w["index"], "bm25", {})
+        reqs = [(w["queries"][0], np.arange(7, dtype=np.int32))]
+        out, _ = serve_batches(eng, reqs, batch_pad=0)
+        assert out[0].shape == (7,)
+
+    def test_pad_multiple_unchanged(self, seine_world):
+        """Counts already on the bucket boundary are not padded."""
+        w = seine_world
+        eng = SeineEngine(w["index"], "bm25", {})
+        reqs = [(w["queries"][0], np.arange(16, dtype=np.int32))]
+        out_pad, _ = serve_batches(eng, reqs, batch_pad=16)
+        out_raw, _ = serve_batches(eng, reqs)
+        np.testing.assert_array_equal(out_pad[0], out_raw[0])
+
+
+class TestServeStatsWindowing:
+    def test_quantiles_over_bounded_deque_past_window(self):
+        stats = ServeStats(window=8)
+        for ms in range(50):                     # 50 records >> window 8
+            stats.record(float(ms))
+        assert len(stats.latencies_ms) == 8      # deque stays bounded
+        # quantiles are over the RECENT window only: samples 42..49
+        assert stats.percentile_ms(0.0) == pytest.approx(42.0)
+        assert stats.percentile_ms(100.0) == pytest.approx(49.0)
+        assert stats.p50_ms == pytest.approx(45.5)
+        # running totals stay exact across the eviction
+        assert stats.n_requests == 50
+        assert stats.total_ms == pytest.approx(sum(range(50)))
+
+    def test_percentile_ms_on_empty_stats(self):
+        stats = ServeStats()
+        for q in (0.0, 50.0, 95.0, 99.9, 100.0):
+            assert stats.percentile_ms(q) == 0.0
+        assert stats.p50_ms == 0.0 and stats.p95_ms == 0.0
+        assert stats.n_requests == 0 and stats.ms_per_request == 0.0
