@@ -28,10 +28,12 @@ def _train_briefly(spec, index, queries, qrels, *, steps=40, seed=0):
         return params, 0.0
 
     def loss_fn(params, batch):
+        # jnp lookup, pinned — same rationale as launch/train.py: vmap'd
+        # B=1 training lookups are not the serving kernel's shape
         def one(qi, p, n):
-            sp = spec.score(params, index.qd_matrix(qi, p[None]),
+            sp = spec.score(params, index.qd_matrix(qi, p[None], impl="jnp"),
                             make_qmeta(index, qi, p[None]), index.functions)
-            sn = spec.score(params, index.qd_matrix(qi, n[None]),
+            sn = spec.score(params, index.qd_matrix(qi, n[None], impl="jnp"),
                             make_qmeta(index, qi, n[None]), index.functions)
             return jnp.maximum(0.0, 1.0 - sp + sn).mean()
         return jax.vmap(one)(batch["q"], batch["pos"], batch["neg"]).mean()

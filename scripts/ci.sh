@@ -2,15 +2,18 @@
 # CI entrypoints.
 #
 #   scripts/ci.sh           tier-1 gate: the full suite (what the driver runs)
-#   scripts/ci.sh fast      iteration lane: build-parity + index-parity
-#                           harnesses first (the cheapest exactness gates),
-#                           then everything not marked `slow` (heavy
-#                           per-arch model smokes)
+#   scripts/ci.sh fast      iteration lane: build-parity + index-parity +
+#                           csr_lookup-parity harnesses first (the cheapest
+#                           exactness gates), then everything not marked
+#                           `slow` (heavy per-arch model smokes)
 #   scripts/ci.sh bench     dist-substrate perf baseline (compression /
-#                           sp-decode) + partitioned-index serving + legacy-
-#                           vs-streaming index build; emits
-#                           BENCH_partitioned.json and BENCH_build.json for
-#                           the perf trajectory
+#                           sp-decode) + partitioned-index serving (incl.
+#                           the fused-vs-jnp serve grid) + legacy-vs-
+#                           streaming index build; emits
+#                           BENCH_partitioned.json, BENCH_serve.json and
+#                           BENCH_build.json for the perf trajectory, and
+#                           FAILS if the fused partitioned lookup at K=2
+#                           is slower than the jnp replicated baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -18,10 +21,22 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 case "${1:-full}" in
   full)  exec python -m pytest -x -q ;;
   fast)  python -m pytest -x -q tests/test_build_pipeline.py \
-              tests/test_partitioned_index.py
+              tests/test_partitioned_index.py \
+              "tests/test_kernels.py::TestCsrLookup"
          exec python -m pytest -x -q -m "not slow" \
               --ignore=tests/test_build_pipeline.py \
-              --ignore=tests/test_partitioned_index.py ;;
-  bench) exec python -m benchmarks.run --only dist,partitioned,index_build ;;
+              --ignore=tests/test_partitioned_index.py \
+              --deselect "tests/test_kernels.py::TestCsrLookup" ;;
+  bench) python -m benchmarks.run --only dist,partitioned,index_build
+         exec python - <<'PY'
+import json, sys
+gate = json.load(open("BENCH_serve.json"))["gate"]
+print(f"serve gate [{gate['metric']}]: "
+      f"fused_k2={gate['fused_k2_lookup_us']:.1f}us vs "
+      f"replicated_jnp={gate['replicated_jnp_lookup_us']:.1f}us "
+      f"-> pass={gate['pass']}")
+sys.exit(0 if gate["pass"] else 1)
+PY
+         ;;
   *) echo "usage: scripts/ci.sh [full|fast|bench]" >&2; exit 2 ;;
 esac

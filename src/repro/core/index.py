@@ -83,8 +83,8 @@ class PairLookupIndex(Protocol):
     def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
                      ) -> jnp.ndarray: ...
 
-    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
-                  ) -> jnp.ndarray: ...
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
+                  *, impl: str = None) -> jnp.ndarray: ...
 
 
 @jax.tree_util.register_dataclass
@@ -139,14 +139,38 @@ class SegmentInvertedIndex:
         vals = self.values.at[pos].get(mode="clip")
         return vals * found[..., None, None]
 
-    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
-                  ) -> jnp.ndarray:
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
+                  *, impl: str = None) -> jnp.ndarray:
         """Stack rows for the query terms (Eq. 4).
 
-        query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f)."""
-        q = jnp.broadcast_to(query_terms[None],
-                             (doc_ids.shape[0],) + query_terms.shape)
-        return self.lookup_pairs(q, doc_ids)
+        query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f).
+
+        ``impl`` picks the lookup expression:
+
+        * ``None`` / ``"fused"`` — the fused serving path
+          (``kernels.csr_lookup``: Pallas kernel on TPU, its routed-jnp
+          lowering on CPU; per-term routing amortised over candidates);
+        * ``"jnp"`` — the legacy broadcast + :meth:`lookup_pairs`
+          composition, the XLA-partitionable expression mesh-placed
+          engines keep (values sharded over 'model' by
+          ``dist.sharding.shard_index``);
+        * ``"interpret"`` — force the Pallas interpreter (parity tests).
+
+        Every impl is held bitwise-equal to ``csr_lookup_positions`` by
+        tests/test_kernels.py::TestCsrLookup.
+        """
+        if impl not in (None, "fused", "jnp", "interpret"):
+            raise ValueError(f"unknown lookup impl {impl!r}; supported: "
+                             "'fused', 'jnp', 'interpret'")
+        if impl == "jnp":
+            q = jnp.broadcast_to(query_terms[None],
+                                 (doc_ids.shape[0],) + query_terms.shape)
+            return self.lookup_pairs(q, doc_ids)
+        from ..kernels.csr_lookup import csr_lookup
+        return csr_lookup(
+            self.term_offsets[None], self.doc_ids[None], self.values[None],
+            None, None, query_terms, doc_ids,
+            interpret=True if impl == "interpret" else None)
 
 
 def merge_run_parts(parts: list, t_lo: int, t_hi: int, *, n_b: int,

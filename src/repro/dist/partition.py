@@ -30,6 +30,15 @@ leading K axis, so one jitted program serves any K and the XLA partitioner
 turns the merge into an all-reduce when K tiles the mesh's model axis.
 Padding rows are empty posting lists (offsets pinned at the shard's nnz)
 and can never be "found": lookups stay exact whatever the padding holds.
+
+That partial-sum plan is the SPMD *expression* — on a single host it pays
+K full-width bisects and K dense partial M matrices for one useful row,
+which PR 3's BENCH_partitioned.json showed losing 2-3x to the replicated
+path.  Serving therefore defaults to the fused routed lookup
+(``kernels.csr_lookup``: Pallas kernel on TPU, routed-jnp lowering on
+CPU) that resolves each (term, doc) pair against its owning shard only;
+the ``impl="jnp"`` partial-sum path remains the mesh-placed expression
+and the SPMD oracle.
 """
 from __future__ import annotations
 
@@ -115,13 +124,34 @@ class PartitionedIndex:
 
     # -- lookups (Eq. 4, term-partitioned) ----------------------------------
 
-    def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray
-                     ) -> jnp.ndarray:
+    def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray,
+                     *, impl: str = None) -> jnp.ndarray:
         """(..., Q) term ids x (...,) doc ids -> (..., Q, n_b, n_f).
 
-        Route each term to its owning shard, resolve shard-locally, merge
-        partial rows by sum (zeros for absent pairs / non-owned terms).
+        Route each term to its owning shard, resolve shard-locally (zeros
+        for absent pairs / non-owned terms).  ``impl`` picks the
+        expression:
+
+        * ``None`` / ``"fused"`` — the routed single-pass lookup
+          (``kernels.csr_lookup.lookup_pairs_ref``): ONE bisect per
+          (term, doc) pair against the owning shard, no K-axis anywhere.
+          Because ownership is exclusive, the cross-shard merge
+          degenerates to exclusive writes — the fast path on one host.
+        * ``"jnp"`` — the SPMD expression: every shard bisects the full
+          query and emits a partial M_{q,d} with exact zeros for
+          non-owned terms; partials merge by summation, which XLA lowers
+          to an all-reduce when the leading K axis is mesh-placed
+          (``shard_partitioned_index``).  K-fold more work on one
+          device — keep it only under a live mesh.
         """
+        if impl not in (None, "fused", "jnp"):
+            raise ValueError(f"unknown lookup impl {impl!r}; supported: "
+                             "'fused', 'jnp'")
+        if impl != "jnp":
+            from ..kernels.csr_lookup import lookup_pairs_ref
+            return lookup_pairs_ref(
+                self.term_offsets, self.doc_ids, self.values,
+                self.term_to_shard, self.range_lo, term_ids, doc_ids)
         w = term_ids.clip(0)
         d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
         shard_of = self.term_to_shard.at[w].get(mode="clip")
@@ -140,12 +170,28 @@ class PartitionedIndex:
             jnp.arange(self.n_shards, dtype=self.term_to_shard.dtype))
         return parts.sum(axis=0)
 
-    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
-                  ) -> jnp.ndarray:
-        """query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f)."""
-        q = jnp.broadcast_to(query_terms[None],
-                             (doc_ids.shape[0],) + query_terms.shape)
-        return self.lookup_pairs(q, doc_ids)
+    def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
+                  *, impl: str = None) -> jnp.ndarray:
+        """query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f).
+
+        The serving hot path.  ``impl=None``/``"fused"`` dispatches to
+        ``kernels.csr_lookup`` (fused Pallas kernel on TPU, its routed
+        jnp lowering on CPU); ``"jnp"`` keeps the SPMD partial-sum
+        composition for mesh-placed serving; ``"interpret"`` forces the
+        Pallas interpreter (the oracle-parity sweep).
+        """
+        if impl not in (None, "fused", "jnp", "interpret"):
+            raise ValueError(f"unknown lookup impl {impl!r}; supported: "
+                             "'fused', 'jnp', 'interpret'")
+        if impl == "jnp":
+            q = jnp.broadcast_to(query_terms[None],
+                                 (doc_ids.shape[0],) + query_terms.shape)
+            return self.lookup_pairs(q, doc_ids, impl="jnp")
+        from ..kernels.csr_lookup import csr_lookup
+        return csr_lookup(
+            self.term_offsets, self.doc_ids, self.values,
+            self.term_to_shard, self.range_lo, query_terms, doc_ids,
+            interpret=True if impl == "interpret" else None)
 
 
 # ---------------------------------------------------------------------------

@@ -8,11 +8,15 @@ seg_interact — SEINE's v-d cartesian (GEMM + segment-reduce epilogues)
 knrm_pool    — KNRM RBF bank + log pooling (11x HBM-traffic fusion)
 embed_bag    — EmbeddingBag gather-reduce with scalar-prefetch index maps
 flash_attn   — causal GQA FlashAttention forward (online softmax)
+csr_lookup   — fused query-time CSR lookup–merge (the serving hot path;
+               routed-jnp lowering on CPU, see its ops.py)
 """
+from .csr_lookup.ops import csr_lookup, csr_lookup_ref
 from .embed_bag.ops import embed_bag, embed_bag_ref
 from .flash_attn.ops import flash_attention, flash_attn_ref
 from .knrm_pool.ops import knrm_pool, knrm_pool_ref
 from .seg_interact.ops import seg_interact, seg_interact_ref
 
-__all__ = ["embed_bag", "embed_bag_ref", "flash_attention", "flash_attn_ref",
+__all__ = ["csr_lookup", "csr_lookup_ref",
+           "embed_bag", "embed_bag_ref", "flash_attention", "flash_attn_ref",
            "knrm_pool", "knrm_pool_ref", "seg_interact", "seg_interact_ref"]

@@ -1,0 +1,3 @@
+from .ops import csr_lookup, csr_lookup_ref, lookup_pairs_ref, route_terms
+
+__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref", "route_terms"]

@@ -1,0 +1,113 @@
+"""csr_lookup — the fused SEINE serving lookup as a Pallas TPU kernel.
+
+SEINE's query phase is Eq. 4: M_{q,d}[i] = values[owner(q_i), pos(q_i, d)]
+— pure random access into the term-partitioned CSR.  The old partitioned
+path ran the full-width branchless bisect on EVERY shard for EVERY
+(query-term, doc) pair and materialised K dense partial M matrices in HBM
+before summing them; this kernel is the routed replacement, fusing per
+grid cell:
+
+  * the CSR offset gather  — per-term (shard, lo, hi) ride the SCALAR
+    PREFETCH stream (PrefetchScalarGridSpec, the embed_bag pattern), so
+    block index maps pick the owning shard's posting row before the body
+    runs;
+  * the branchless bisect  — 32 steps over the owner's doc-id slice held
+    in VMEM (identical integer ops to ``core.index._bisect``, which keeps
+    the result bitwise-equal to ``csr_lookup_positions``);
+  * the found-mask select  — the hit's values row is DMA'd from the HBM-
+    resident ``values`` (the O(nnz) bulk never enters VMEM wholesale) and
+    masked to zero for absent / OOV pairs;
+  * the cross-shard merge  — ownership is exclusive (term_to_shard is a
+    function), so the K-partial accumulator degenerates to one exclusive
+    write per (doc, term) output cell: no partials, no sum, no psum.
+
+grid = (Q, B): cell (i, j) resolves query term i against candidate j and
+writes the single (1, 1, n_b, n_f) output tile.  The doc-id row block is
+index-mapped by the prefetched shard id, and since j is the fastest grid
+dim, Pallas keeps it VMEM-resident across all B candidates of a term
+(and across consecutive terms routed to the same shard).
+
+VMEM per cell: the owner's doc-id row (Nmax x 4 B — 4 MiB at 1M postings/
+shard; posting-slice tiling is the documented follow-up past that) + one
+(n_b, n_f) values row.  Scalar reads of ``dids_ref`` at dynamic offsets
+lower to strided VMEM loads; the values row fetch is a genuinely dynamic
+HBM->VMEM DMA (``make_async_copy`` on a ``pl.ANY`` ref, the only way to
+gather by a position computed in-kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import bisect_steps
+
+
+def _make_kernel(n_iter: int):
+    def _kernel(shard_ref, lo_ref, hi_ref, docs_ref, dids_ref, vals_ref,
+                out_ref, buf, sem):
+        i = pl.program_id(0)                 # query term
+        k = shard_ref[i]                     # owning shard (prefetched)
+        lo0, hi0 = lo_ref[i], hi_ref[i]      # posting range (prefetched)
+        d = docs_ref[0, 0]                   # candidate doc id
+        n = dids_ref.shape[1]
+
+        # branchless bisect: first pos in [lo, hi) with doc_ids[pos] >= d
+        # — the same ops as core.index._bisect, on the owner's row only,
+        # and only the bit_length(Nmax) steps the shard width needs
+        def body(_, state):
+            lo, hi = state
+            mid = (lo + hi) // 2
+            v = dids_ref[0, jnp.clip(mid, 0, n - 1)]
+            go_right = (v < d) & (lo < hi)
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        pos, _ = jax.lax.fori_loop(0, n_iter, body, (lo0, hi0))
+        p = jnp.clip(pos, 0, n - 1)
+        found = (pos < hi0) & (dids_ref[0, p] == d)
+
+        # fused found-mask select: DMA the hit's values row HBM -> VMEM
+        # and mask — absent pairs emit exact zeros (the sigma=0 semantics)
+        dma = pltpu.make_async_copy(vals_ref.at[k, p], buf, sem)
+        dma.start()
+        dma.wait()
+        row = buf[...] * jnp.where(found, 1.0, 0.0).astype(jnp.float32)
+        out_ref[...] = row[None, None]
+
+    return _kernel
+
+
+def csr_lookup_pallas(shard: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                      doc_targets: jnp.ndarray, doc_ids: jnp.ndarray,
+                      values: jnp.ndarray, *,
+                      interpret: bool = False) -> jnp.ndarray:
+    """shard/lo/hi (Q,) int32 routed per term (ops.route_terms);
+    doc_targets (B,) int32; doc_ids (K, Nmax) int32;
+    values (K, Nmax, n_b, n_f) f32 -> M (B, Q, n_b, n_f) f32."""
+    Q = shard.shape[0]
+    B = doc_targets.shape[0]
+    K, N = doc_ids.shape
+    n_b, n_f = values.shape[2], values.shape[3]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # shard, lo, hi
+        grid=(Q, B),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, s, lo, hi: (0, j)),
+            pl.BlockSpec((1, N), lambda i, j, s, lo, hi: (s[i], 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # values stay in HBM
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_b, n_f),
+                               lambda i, j, s, lo, hi: (j, i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_b, n_f), jnp.float32),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel(bisect_steps(N)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Q, n_b, n_f), jnp.float32),
+        interpret=interpret,
+    )(shard, lo, hi, doc_targets[None].astype(jnp.int32), doc_ids, values)

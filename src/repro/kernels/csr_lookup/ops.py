@@ -1,0 +1,49 @@
+"""jit'd public wrapper for the fused csr_lookup serving kernel.
+
+Backend dispatch differs from the sibling kernels on purpose: this op IS
+the serving hot path, latency-gated by scripts/ci.sh bench, so on CPU it
+lowers to :func:`~.ref.csr_lookup_ref` — the routed-gather jnp expression
+of the SAME fused dataflow (one bisect per (term, doc) pair against the
+owning shard, no K partials), bitwise-identical to the kernel — instead
+of the Pallas interpreter, which emulates the grid cell-by-cell and is a
+correctness tool, not a fast path.  ``interpret=True`` forces the
+interpreter (the oracle-parity sweep in tests/test_kernels.py);
+``interpret=False`` forces the compiled TPU kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import csr_lookup_pallas
+from .ref import csr_lookup_ref, lookup_pairs_ref, route_terms
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+               values: jnp.ndarray, term_to_shard, range_lo,
+               query_terms: jnp.ndarray, doc_targets: jnp.ndarray,
+               *, interpret: bool | None = None) -> jnp.ndarray:
+    """Fused lookup–merge: query_terms (Q,) x doc_targets (B,) over a
+    K-stacked shard CSR -> M_{q,d} (B, Q, n_b, n_f); zeros for absent
+    pairs, OOV / past-vocab terms and out-of-range doc ids.
+
+    ``term_offsets (K, Vmax+1)`` / ``doc_ids (K, Nmax)`` /
+    ``values (K, Nmax, n_b, n_f)`` are the PartitionedIndex layout; the
+    single-CSR case is ``K == 1`` with ``term_to_shard=None`` (terms
+    route to shard 0 at their own row).
+    """
+    if interpret is None and jax.default_backend() != "tpu":
+        return csr_lookup_ref(term_offsets, doc_ids, values, term_to_shard,
+                              range_lo, query_terms, doc_targets)
+    k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
+                            range_lo)
+    return csr_lookup_pallas(
+        k.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32),
+        doc_targets.astype(jnp.int32), doc_ids,
+        values.astype(jnp.float32), interpret=bool(interpret))
+
+
+__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref", "route_terms"]

@@ -1,0 +1,119 @@
+"""Routed CSR lookup–merge, pure jnp — oracle AND the op's CPU lowering.
+
+The math the fused kernel implements, expressed as one vectorized pass
+over the *stacked* shard CSR (K, ...) with NO K-axis loop:
+
+  route    k  = term_to_shard[w]          each query term to its owner
+  gather   lo = term_offsets[k, w - range_lo[k]]   (the CSR offset gather)
+           hi = term_offsets[k, ... + 1]
+  bisect   pos over doc_ids[k, lo:hi)     the same 32-step branchless
+                                          bisect as the single-CSR path
+                                          (``core.index._bisect`` — the
+                                          bitwise oracle of record)
+  select   values[k, pos] * found         zeros for absent / OOV pairs
+
+Because every (term, doc) pair is resolved against exactly its owning
+shard, the cross-shard "merge" degenerates to exclusive single writes —
+no K partial M_{q,d} matrices exist to sum, which is where the old
+``vmap``-over-shards path paid K full-width bisects plus K dense partials
+(BENCH_partitioned.json, PR 3: 2-3x slower than replicated at K=4).
+
+Implementation trick: the shard axis is folded into the position space —
+``doc_ids (K, N)`` viewed as ``(K*N,)`` with per-term base ``k*N`` — so
+:func:`~repro.core.index._bisect` runs unchanged and the result is
+bitwise-identical to ``csr_lookup_positions`` on the single CSR (each
+shard's slice holds exactly the rows the global CSR holds for its
+terms).  Envelope: the flattened view needs ``K * Nmax < 2^31`` (int32
+positions) — the same per-host wall the single-CSR skeleton has; the
+Pallas kernel (the TPU path) indexes shards natively and does not
+inherit it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bisect_steps(n: int) -> int:
+    """Iterations for the branchless bisect to converge over a posting
+    span of width <= n: each step at least halves ``hi - lo``, so
+    ``floor(log2 n) + 1`` (= ``n.bit_length()``) steps reach width 0.
+    The single-CSR path fixes 32 (any int32 nnz); a shard's span is
+    statically bounded by its padded width ``Nmax``, which cuts the
+    serving bisect to ~15 steps at bench scale — bitwise-identical,
+    since the bisect is stationary once converged."""
+    return max(int(n).bit_length(), 1)
+
+
+def route_terms(term_ids: jnp.ndarray, term_offsets: jnp.ndarray,
+                term_to_shard, range_lo):
+    """Route global term ids to owning shards and posting ranges.
+
+    term_ids (...,) int32 (raw query ids: negatives = padding, past-vocab
+    legal), term_offsets (K, Vmax+1) — returns ``(k, lo, hi)`` all shaped
+    like ``term_ids``, with ``lo == hi`` (empty range, never "found") for
+    every invalid term.  ``term_to_shard=None`` is the single-CSR case
+    (K == 1): everything routes to shard 0 at its own row.
+    """
+    vmax = term_offsets.shape[1] - 1
+    w = term_ids.clip(0)
+    if term_to_shard is None:
+        k = jnp.zeros(w.shape, jnp.int32)
+        row = w
+    else:
+        k = term_to_shard.at[w].get(mode="clip").astype(jnp.int32)
+        row = w - range_lo.at[k].get(mode="clip")
+    # past-vocab rows clip into the pinned-at-nnz tail -> lo == hi; the
+    # widest shard has no tail, but there row == vmax only when the term
+    # is past the vocab, and offsets[k, vmax] == nnz_k -> still empty
+    row = row.clip(0, vmax)
+    lo = term_offsets.at[k, row].get(mode="clip")
+    hi = term_offsets.at[k, (row + 1).clip(0, vmax)].get(mode="clip")
+    hi = jnp.where(term_ids >= 0, hi, lo)      # negatives: empty range
+    return k, lo, hi
+
+
+def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                     values: jnp.ndarray, term_to_shard, range_lo,
+                     term_ids: jnp.ndarray, doc_targets: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Generic-batch routed lookup: term_ids (..., Q) x doc_targets
+    broadcastable (...,) -> (..., Q, n_b, n_f), zeros for absent pairs."""
+    from ...core.index import _bisect
+
+    K, N = doc_ids.shape
+    k, lo, hi = route_terms(term_ids, term_offsets, term_to_shard, range_lo)
+    d = jnp.broadcast_to(doc_targets[..., None], term_ids.shape)
+    base = k * N
+    flat = doc_ids.reshape(K * N)
+    pos = _bisect(flat, base + lo, base + hi, d, n_iter=bisect_steps(N))
+    in_list = (pos < base + hi) & (flat.at[pos].get(mode="clip") == d)
+    vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
+    return vals * in_list[..., None, None]
+
+
+def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                   values: jnp.ndarray, term_to_shard, range_lo,
+                   query_terms: jnp.ndarray, doc_targets: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """The serving cartesian: query_terms (Q,) x doc_targets (B,) ->
+    M_{q,d} (B, Q, n_b, n_f).
+
+    Routing runs once on the (Q,) terms and broadcasts over candidates —
+    cheaper than the single-CSR path's per-(B, Q) offset gathers — which
+    is also exactly the dataflow of the Pallas kernel (scalar-prefetched
+    per-term routing, doc-tiled grid).
+    """
+    from ...core.index import _bisect
+
+    K, N = doc_ids.shape
+    k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
+                            range_lo)                       # (Q,)
+    shape = (doc_targets.shape[0], query_terms.shape[0])    # (B, Q)
+    d = jnp.broadcast_to(doc_targets[:, None], shape)
+    lo_f = jnp.broadcast_to((k * N + lo)[None], shape)
+    hi_f = jnp.broadcast_to((k * N + hi)[None], shape)
+    flat = doc_ids.reshape(K * N)
+    pos = _bisect(flat, lo_f, hi_f, d, n_iter=bisect_steps(N))
+    in_list = (pos < hi_f) & (flat.at[pos].get(mode="clip") == d)
+    vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
+    return vals * in_list[..., None, None]

@@ -543,7 +543,10 @@ def _seine_cells(mesh: Mesh) -> List[Cell]:
         lambda: spec.init(jax.random.key(0), n_b, FUNCTION_NAMES))
 
     def retrieve_step(index, kparams, query, cands):
-        m = index.qd_matrix(query, cands)
+        # mesh-placed cell: keep the XLA-partitionable jnp lookup (the
+        # same dispatch SeineEngine makes under a mesh) so the dry-run
+        # evidence reflects the SPMD plan, not the fused single-host path
+        m = index.qd_matrix(query, cands, impl="jnp")
         meta = make_qmeta(index, query, cands)
         return spec.score(kparams, m, meta, index.functions)
 

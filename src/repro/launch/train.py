@@ -50,10 +50,13 @@ def train_seine_ranker(retriever: str, steps: int, ckpt_dir, *, seed=0,
         raise SystemExit(f"{retriever} has no trainable params")
 
     def loss_fn(params, batch):
+        # jnp lookup, pinned: per-example B=1 lookups under vmap+grad gain
+        # nothing from the serving kernel (and only the jnp path is
+        # exercised under batching on every backend)
         def one(qi, p, n):
-            sp = spec.score(params, index.qd_matrix(qi, p[None]),
+            sp = spec.score(params, index.qd_matrix(qi, p[None], impl="jnp"),
                             make_qmeta(index, qi, p[None]), index.functions)
-            sn = spec.score(params, index.qd_matrix(qi, n[None]),
+            sn = spec.score(params, index.qd_matrix(qi, n[None], impl="jnp"),
                             make_qmeta(index, qi, n[None]), index.functions)
             return jnp.maximum(0.0, 1.0 - sp + sn).mean()
         return jax.vmap(one)(batch["q"], batch["pos"], batch["neg"]).mean()

@@ -56,6 +56,12 @@ class SeineEngine:
     A pre-built :class:`~repro.dist.partition.PartitionedIndex` (from the
     shard-native ``IndexBuilder.build_partitioned``) is served as-is —
     only mesh placement is applied.
+
+    Lookup dispatch: without a mesh the engine scores over the FUSED
+    lookup path (``kernels.csr_lookup`` — one routed bisect per
+    (term, doc) pair, no K partial matrices); with a mesh it keeps the
+    partial-sum jnp expression the XLA partitioner turns into an
+    all-reduce.  Both are held bitwise-equal to the single-CSR oracle.
     """
 
     def __init__(self, index: PairLookupIndex, retriever: str,
@@ -66,6 +72,10 @@ class SeineEngine:
             raise ValueError(f"unknown partition scheme {partition!r}; "
                              "supported: 'term'")
         self.mesh = mesh
+        # mesh-less default: _place is never called, but must not crash if
+        # it ever is (latent AttributeError — _data_axes was only assigned
+        # under `mesh is not None`)
+        self._data_axes = ()
         from ..dist.partition import PartitionedIndex
         if isinstance(index, PartitionedIndex):
             # born-sharded (builder.build_partitioned): use it as-is
@@ -91,10 +101,16 @@ class SeineEngine:
         self.index = index
         self.spec = get_retriever(retriever)
         self.params = params
+        # lookup dispatch: mesh-less serving takes the fused hot path
+        # (kernels.csr_lookup); under a mesh the index arrays carry
+        # NamedShardings, so keep the XLA-partitionable jnp expression
+        # (partial-sum merge -> all-reduce over the model axis)
+        self._lookup_impl = "jnp" if mesh is not None else "fused"
         self._score = jax.jit(self._score_impl)
 
     def _score_impl(self, params, query_terms, doc_ids):
-        m = self.index.qd_matrix(query_terms, doc_ids)
+        m = self.index.qd_matrix(query_terms, doc_ids,
+                                 impl=self._lookup_impl)
         meta = make_qmeta(self.index, query_terms, doc_ids)
         return self.spec.score(params, m, meta, self.index.functions)
 

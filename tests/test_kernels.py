@@ -1,16 +1,20 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (deliverable c).
 
 Pallas kernels run in interpret mode on CPU (the container has no TPU);
-shapes/dtypes swept per kernel, asserting against ref.py.
+shapes/dtypes swept per kernel, asserting against ref.py.  csr_lookup is
+the exception twice over: it is the *serving* hot path, so its sweep is
+held to rtol=0/atol=0 against ``csr_lookup_positions`` (the single-CSR
+oracle of record), and its CPU lowering is the routed-jnp ref rather
+than the interpreter (ops.py) — both lowerings are swept here.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (embed_bag, embed_bag_ref, flash_attention,
-                           flash_attn_ref, knrm_pool, knrm_pool_ref,
-                           seg_interact, seg_interact_ref)
+from repro.kernels import (csr_lookup, embed_bag, embed_bag_ref,
+                           flash_attention, flash_attn_ref, knrm_pool,
+                           knrm_pool_ref, seg_interact, seg_interact_ref)
 
 
 class TestSegInteract:
@@ -71,6 +75,148 @@ class TestSegInteract:
             np.testing.assert_allclose(out[..., ki], m[..., fi],
                                        rtol=1e-3, atol=1e-4,
                                        err_msg=f"{name} mismatch")
+
+
+class TestCsrLookup:
+    """Oracle-parity sweep for the fused serving lookup.
+
+    The single-CSR legacy path (``csr_lookup_positions`` via
+    ``qd_matrix(impl="jnp")``) is the oracle; every csr_lookup lowering —
+    the routed-jnp CPU path AND the Pallas kernel in interpret mode —
+    must reproduce it exactly (rtol=0/atol=0) across K in {1, 2, 4},
+    including OOV (-1) terms, past-vocab terms, absent pairs,
+    out-of-range / negative doc ids, and padded-tail candidate sets.
+    """
+    K_SWEEP = (1, 2, 4)
+    RETRIEVERS = ("knrm", "deeptilebars", "hint", "deepimpact")
+
+    def _adversarial(self, w, seed, n_docs_tail=3):
+        """(query (8,), docs (8,)) mixing every hostile id class; the
+        candidate tail repeats docs[0] — the serve_batches pad pattern."""
+        idx = w["index"]
+        rng = np.random.RandomState(seed)
+        toks = w["toks"]
+        d = rng.randint(0, len(w["ds"].docs))
+        present = np.unique(toks[d][toks[d] >= 0])
+        absent = np.setdiff1d(np.arange(idx.vocab_size),
+                              np.unique(toks))[:2]
+        q = np.full(8, -1, np.int32)                  # OOV padding
+        sel = rng.choice(present, size=min(3, present.size), replace=False)
+        q[:sel.size] = sel
+        q[4:4 + absent.size] = absent                 # absent pairs
+        q[6] = idx.vocab_size + rng.randint(1, 10)    # past the vocab
+        q[7] = 0                                      # first-term edge
+        core = np.array([0, idx.n_docs - 1,
+                         rng.randint(0, idx.n_docs),
+                         idx.n_docs,                       # one past the end
+                         idx.n_docs + rng.randint(1, 50),  # far out of range
+                         -3], np.int32)                    # negative
+        docs = np.concatenate(                             # padded tail
+            [core, np.full(n_docs_tail, core[0], np.int32)])
+        return jnp.asarray(q), jnp.asarray(docs)
+
+    def test_ref_lowering_bitwise(self, seine_world):
+        """CPU fused lowering == oracle for single-CSR and every K."""
+        from repro.dist.sharding import partition_index
+        idx = seine_world["index"]
+        for seed in range(3):
+            q, docs = self._adversarial(seine_world, seed)
+            oracle = np.asarray(idx.qd_matrix(q, docs, impl="jnp"))
+            np.testing.assert_array_equal(
+                np.asarray(idx.qd_matrix(q, docs)), oracle)
+            for k in self.K_SWEEP:
+                p = partition_index(idx, k)
+                np.testing.assert_array_equal(
+                    np.asarray(p.qd_matrix(q, docs)), oracle,
+                    err_msg=f"K={k} seed={seed} fused-ref")
+
+    def test_interpret_kernel_bitwise(self, seine_world):
+        """The Pallas kernel itself (interpret mode: scalar-prefetch
+        routing, in-kernel bisect, dynamic values DMA) == oracle."""
+        from repro.dist.sharding import partition_index
+        idx = seine_world["index"]
+        for seed in range(2):
+            q, docs = self._adversarial(seine_world, seed)
+            oracle = np.asarray(idx.qd_matrix(q, docs, impl="jnp"))
+            np.testing.assert_array_equal(
+                np.asarray(idx.qd_matrix(q, docs, impl="interpret")), oracle)
+            for k in self.K_SWEEP:
+                p = partition_index(idx, k)
+                np.testing.assert_array_equal(
+                    np.asarray(p.qd_matrix(q, docs, impl="interpret")),
+                    oracle, err_msg=f"K={k} seed={seed} pallas-interpret")
+
+    def test_raw_op_matches_lookup_positions(self, seine_world):
+        """The op against csr_lookup_positions directly (not through
+        qd_matrix), on an all-real id batch — positions, found mask and
+        value rows all agree."""
+        from repro.core.index import csr_lookup_positions
+        idx = seine_world["index"]
+        rng = np.random.RandomState(7)
+        q = jnp.asarray(rng.randint(0, idx.vocab_size, 6).astype(np.int32))
+        docs = jnp.asarray(rng.randint(0, idx.n_docs, 16).astype(np.int32))
+        w = jnp.broadcast_to(q[None], (16, 6))
+        d = jnp.broadcast_to(docs[:, None], (16, 6))
+        pos, in_list = csr_lookup_positions(idx.term_offsets, idx.doc_ids,
+                                            w, d)
+        want = (idx.values.at[pos].get(mode="clip")
+                * in_list[..., None, None])
+        got = csr_lookup(idx.term_offsets[None], idx.doc_ids[None],
+                         idx.values[None], None, None, q, docs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_engine_fused_scores_all_retrievers(self, seine_world):
+        """Engine-level: the fused serving path reproduces the legacy
+        lookup's scores exactly for every indexed retriever x K."""
+        from repro.dist.sharding import partition_index
+        from repro.retrievers import get_retriever
+        from repro.serving import SeineEngine
+        w = seine_world
+        idx = w["index"]
+        docs = jnp.arange(16)
+        for retriever in self.RETRIEVERS:
+            spec = get_retriever(retriever)
+            params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+            oracle = SeineEngine(idx, retriever, params)
+            oracle._lookup_impl = "jnp"     # legacy lookup, same jit shape
+            for i, qq in enumerate(w["queries"][:2]):
+                q = jnp.asarray(qq)
+                ref = np.asarray(oracle.score(q, docs))
+                for k in self.K_SWEEP:
+                    eng = SeineEngine(partition_index(idx, k), retriever,
+                                      params)
+                    assert eng._lookup_impl == "fused"
+                    np.testing.assert_allclose(
+                        np.asarray(eng.score(q, docs)), ref, rtol=0, atol=0,
+                        err_msg=f"{retriever} K={k} query {i}")
+
+    def test_unknown_impl_rejected(self, seine_world):
+        """Typos must not silently select the fused path (and lookup_pairs
+        has no interpreter lowering to fall back to)."""
+        from repro.dist.sharding import partition_index
+        idx = seine_world["index"]
+        p = partition_index(idx, 2)
+        q, docs = jnp.zeros(4, jnp.int32), jnp.arange(4)
+        for fn in (idx.qd_matrix, p.qd_matrix):
+            with pytest.raises(ValueError, match="unknown lookup impl"):
+                fn(q, docs, impl="fussed")
+        with pytest.raises(ValueError, match="unknown lookup impl"):
+            p.lookup_pairs(q[None], docs[:1], impl="interpret")
+
+    def test_bisect_depth_is_sufficient(self):
+        """bit_length(N) bisect steps reach the 32-step fixed point for
+        every width <= N (the depth cut the serving path relies on)."""
+        from repro.core.index import _bisect
+        from repro.kernels.csr_lookup.ref import bisect_steps
+        rng = np.random.RandomState(0)
+        for n in (1, 2, 3, 7, 64, 1000, 1 << 14):
+            arr = jnp.asarray(np.sort(rng.randint(0, n, n)).astype(np.int32))
+            t = jnp.asarray(rng.randint(-1, n + 1, 64).astype(np.int32))
+            lo = jnp.zeros_like(t)
+            hi = jnp.full_like(t, n)
+            np.testing.assert_array_equal(
+                np.asarray(_bisect(arr, lo, hi, t, bisect_steps(n))),
+                np.asarray(_bisect(arr, lo, hi, t, 32)), err_msg=f"n={n}")
 
 
 class TestKnrmPool:

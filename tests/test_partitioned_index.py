@@ -238,6 +238,23 @@ class TestOracleParity:
                 assert v.sharding == getattr(sh, f.name)
 
 
+class TestEngineInit:
+    def test_meshless_engine_has_empty_data_axes(self, seine_world):
+        """Regression: _data_axes was only assigned under ``mesh is not
+        None`` while _place reads it unconditionally — a mesh-less engine
+        must carry the empty default instead of a latent AttributeError."""
+        w = seine_world
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), w["index"].n_b,
+                           w["index"].functions)
+        eng = SeineEngine(w["index"], "knrm", params)
+        assert eng._data_axes == ()
+        assert eng._lookup_impl == "fused"
+        mesh = make_host_mesh(data=len(jax.devices()))
+        meng = SeineEngine(w["index"], "knrm", params, mesh=mesh)
+        assert meng._data_axes != () and meng._lookup_impl == "jnp"
+
+
 class TestServeStatsPercentiles:
     def test_percentiles_and_mean(self):
         stats = ServeStats()
