@@ -10,14 +10,21 @@ partitioning shrinks ~1/K.
 
     PYTHONPATH=src python -m benchmarks.run --only partitioned
 
-Timing is median-of-N with warmup excluded (single-pass numbers were
-jitter-prone, which made the fused-vs-jnp comparison ungateable).  Two
-JSON artifacts accumulate the perf trajectory across PRs:
+Timing is min-of-N with warmup excluded (single-pass numbers were
+jitter-prone, and even medians of 25 reps wobbled 1.3-1.5x between runs
+on a loaded host — scheduler noise is one-sided, so the min is the
+stable estimator the 1.3x CI regression gate needs).  Two JSON
+artifacts accumulate the perf trajectory across PRs:
 
 * ``BENCH_partitioned.json`` — the original schema (serving-path numbers);
 * ``BENCH_serve.json``       — the full fused-vs-jnp grid plus the CI
   gate record: fused partitioned lookup at K=2 must not be slower than
   the jnp replicated baseline (scripts/ci.sh bench enforces it).
+
+Both also carry the Zipfian hot-term corpus sweep (``zipf_term_k*``
+paths + ``zipf_bytes_gate``): one stopword list dominating nnz/K, where
+doc-range sub-sharding must hold ``bytes_shrink_vs_replicated`` at
+>= 0.8*K for every K (the second gate scripts/ci.sh bench enforces).
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import bench_world, emit
+from .common import bench_world, emit, zipf_world
 
 K_SWEEP = (1, 2, 4)
 # big enough that lookup compute dominates per-call dispatch (at 128 the
@@ -42,10 +49,14 @@ REPS = int(os.environ.get("REPRO_BENCH_REPS", 25))
 WARMUP = int(os.environ.get("REPRO_BENCH_WARMUP", 3))
 
 
-def _time_median(f, *args, reps: int = REPS, warmup: int = WARMUP) -> float:
-    """Median of ``reps`` per-call timings, ``warmup`` calls excluded
-    (compile + cache-settling); medians resist the scheduler jitter that
-    single-pass means amplified."""
+def _time_min(f, *args, reps: int = REPS, warmup: int = WARMUP) -> float:
+    """Minimum of ``reps`` per-call timings, ``warmup`` calls excluded
+    (compile + cache-settling).  Scheduler noise on a shared host is
+    ONE-SIDED — interference only ever adds time — so the min is the
+    estimator of the true cost with the least run-to-run variance:
+    medians of 25 reps still wobbled 1.3-1.5x between runs on a loaded
+    container, which made the CI regression gate
+    (scripts/bench_gate.py, threshold 1.3x) flap on unchanged code."""
     for _ in range(warmup):
         jax.block_until_ready(f(*args))
     ts = []
@@ -53,7 +64,7 @@ def _time_median(f, *args, reps: int = REPS, warmup: int = WARMUP) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(f(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.min(ts))
 
 
 def _write_json(name: str, record: dict) -> str:
@@ -83,17 +94,17 @@ def run() -> list:
     def measure(index):
         out = {}
         for impl in ("fused", "jnp"):
-            out.setdefault("lookup_us", {})[impl] = _time_median(
+            out.setdefault("lookup_us", {})[impl] = _time_min(
                 jax.jit(partial(index.qd_matrix, impl=impl)), q, docs) * 1e6
             eng = engine(index, impl)
-            out.setdefault("score_us", {})[impl] = _time_median(
+            out.setdefault("score_us", {})[impl] = _time_min(
                 lambda qq, dd: eng.score(qq, dd), q, docs) * 1e6
         return out
 
     rows = []
     serve = {"nnz": idx.nnz, "vocab": idx.vocab_size, "n_docs": idx.n_docs,
              "candidates": int(docs.shape[0]),
-             "timing": {"reps": REPS, "warmup": WARMUP, "stat": "median"},
+             "timing": {"reps": REPS, "warmup": WARMUP, "stat": "min"},
              "paths": {}}
     compat = {"nnz": idx.nnz, "vocab": idx.vocab_size, "n_docs": idx.n_docs,
               "candidates": int(docs.shape[0]), "paths": {}}
@@ -146,11 +157,50 @@ def run() -> list:
                         <= gate["replicated_jnp_lookup_us"])
     serve["gate"] = gate
 
+    # the Zipfian hot-term corpus: one stopword list dominates nnz/K, the
+    # shape where term-aligned partitioning used to pin bytes_shrink at
+    # ~1x.  Doc-range sub-sharding must restore >= 0.8*K on every K (the
+    # second record scripts/ci.sh bench enforces).
+    zw = zipf_world()
+    zidx = zw["index"]
+    zq = jnp.asarray(zw["queries"][0])
+    zdocs = jnp.asarray(np.arange(N_CANDIDATES) % zidx.n_docs)
+    zbase_us = _time_min(
+        jax.jit(partial(zidx.qd_matrix, impl="jnp")), zq, zdocs) * 1e6
+    zbase_bytes = zidx.nbytes
+    zgate = {"metric": "zipf term_k.bytes_shrink_vs_replicated >= 0.8*K",
+             "nnz": zidx.nnz, "hot_term_postings": int(np.asarray(
+                 zidx.term_offsets)[1]), "per_k": {}}
+    ok = True
+    for k in K_SWEEP:
+        zp = partition_index(zidx, k)
+        shrink = zbase_bytes / zp.per_device_nbytes
+        us = _time_min(jax.jit(partial(zp.qd_matrix, impl="fused")),
+                          zq, zdocs) * 1e6
+        sub_sharded = zp.split_term is not None
+        rec = {"lookup_us": us, "bytes_per_device": zp.per_device_nbytes,
+               "bytes_shrink_vs_replicated": shrink,
+               "sub_sharded": sub_sharded}
+        serve["paths"][f"zipf_term_k{k}"] = dict(
+            rec, replicated_jnp_lookup_us=zbase_us)
+        compat["paths"][f"zipf_term_k{k}"] = rec
+        zgate["per_k"][str(k)] = {"shrink": shrink, "floor": 0.8 * k,
+                                  "pass": bool(shrink >= 0.8 * k)}
+        ok &= shrink >= 0.8 * k
+        rows.append((f"partitioned/zipf_term_k{k}_lookup", us,
+                     f"shrink={shrink:.2f}x sub_sharded={sub_sharded}"))
+    zgate["pass"] = bool(ok)
+    serve["zipf_bytes_gate"] = zgate
+    compat["zipf_bytes_gate"] = zgate
+
     _write_json("BENCH_partitioned.json", compat)
     path = _write_json("BENCH_serve.json", serve)
     rows.append(("partitioned/serve_gate",
                  gate["fused_k2_lookup_us"],
                  f"pass={gate['pass']} json={path}"))
+    rows.append(("partitioned/zipf_bytes_gate",
+                 min(g["shrink"] for g in zgate["per_k"].values()),
+                 f"pass={zgate['pass']}"))
     return rows
 
 

@@ -8,7 +8,6 @@ import os
 import time
 from functools import lru_cache
 
-import jax
 import numpy as np
 
 N_DOCS = int(os.environ.get("REPRO_BENCH_DOCS", 200))
@@ -41,6 +40,28 @@ def bench_world(n_segments: int = 20, seed: int = 0):
     return dict(cfg=cfg, ds=ds, vocab=vocab, toks=toks, segs=segs,
                 provider=provider, builder=builder, index=index,
                 queries=queries, build_s=build_s)
+
+
+@lru_cache(maxsize=2)
+def zipf_world(n_docs: int = 1000, vocab: int = 600, n_b: int = 20,
+               seed: int = 0):
+    """Zipfian hot-term corpus: term 0 posts in EVERY doc (the stopword
+    band the vocabulary's keep_frac normally trims), the rest decay
+    ~1/(w+1)^1.5 — the shape where term-aligned partitioning pins every
+    shard's padded width at the hot list and per-device bytes stop
+    shrinking ~1/K.  The generator is shared with the oracle-parity
+    tests (``repro.data.synth_corpus.build_zipfian_index``) so the CI
+    bytes gate and the exactness sweeps exercise the same distribution;
+    values are synthetic, isolating the partitioning story from the
+    interaction pass.
+    """
+    from repro.data.synth_corpus import build_zipfian_index
+
+    index = build_zipfian_index(n_docs=n_docs, vocab=vocab, n_b=n_b,
+                                tail_decay=1.5, doc_len=50.0, seed=seed)
+    queries = [np.array([0, 1, 3, 17, 80, 311], np.int32),
+               np.array([0, 2, 9, 44, 199, -1], np.int32)]
+    return dict(index=index, queries=queries)
 
 
 def emit(rows):

@@ -16,8 +16,7 @@ from repro.core import (HashProvider, IndexBuilder, build_vocabulary,
 from repro.data.batching import pad_queries
 from repro.data.metrics import evaluate_ranking, mean_metrics
 from repro.data.synth_corpus import generate
-from repro.retrievers import get_retriever
-from repro.serving import SeineEngine, make_qmeta
+from repro.serving import SeineEngine
 
 
 def main() -> None:

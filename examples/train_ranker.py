@@ -8,9 +8,6 @@ import argparse
 import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.train import train_seine_ranker
 

@@ -1,0 +1,265 @@
+"""Perf regression gate over the BENCH_*.json artifacts.
+
+Compares every benchmark JSON freshly written by ``scripts/ci.sh bench``
+against a committed baseline snapshot (the same files at HEAD, saved by
+ci.sh before the benchmarks run) and FAILS on a >THRESHOLD slowdown of
+any latency metric or shrink of any throughput metric, printing a
+per-metric table.  Two always-on absolute gates ride along, read from
+BENCH_serve.json:
+
+* ``gate``            — fused partitioned lookup at K=2 must not be
+                        slower than the jnp replicated baseline (the
+                        PR-4 serving claim);
+* ``zipf_bytes_gate`` — on the Zipfian hot-term corpus, per-device bytes
+                        must shrink >= 0.8*K for every K (the doc-range
+                        sub-sharding claim).
+
+Metric classification is by key name, applied recursively over each
+JSON's nested dicts (list indices become path segments):
+
+* ``*_us`` / ``*_ms`` / ``*_s`` / ``*_bytes`` / ``*bytes_per_device``
+  -> lower is better (fail when current > threshold * baseline);
+* ``*_per_s`` / ``*_shrink*`` / ``*throughput_ratio*``
+  -> higher is better (fail when current < baseline / threshold);
+* anything else (counts, configs, booleans) is ignored.
+
+A metric present in the baseline but MISSING from the current run is a
+failure too — a regression must not be hideable by deleting its metric.
+Metrics new in the current run pass (they have no baseline yet).
+
+Timing metrics are additionally normalized by the file's MEDIAN timing
+ratio before gating: CI runners (and this container) drift +-40% in
+overall speed between runs, which a per-metric absolute threshold reads
+as a regression of everything.  A uniform machine slowdown moves every
+timing ratio together and normalizes away; a CODE regression moves one
+path against its siblings and trips both the raw and the normalized
+threshold (a timing metric fails only when BOTH exceed it).  Byte /
+shrink metrics are deterministic for a fixed corpus and gate on the raw
+ratio alone.
+
+All paths resolve against the repo root (the parent of this script's
+directory), never the cwd.  Exit codes: 0 = pass, 1 = gate failure,
+3 = required file missing/unreadable (distinct so CI can tell "bench
+never ran" from "bench regressed").
+
+Usage:
+    python scripts/bench_gate.py --baseline-dir DIR [--threshold 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_FILES = ("BENCH_partitioned.json", "BENCH_serve.json",
+               "BENCH_build.json")
+DEFAULT_THRESHOLD = 1.3
+
+EXIT_PASS, EXIT_FAIL, EXIT_MISSING = 0, 1, 3
+
+_LOWER = ("_us", "_ms", "_s", "_bytes", "bytes_per_device")
+_HIGHER = ("_per_s", "throughput_ratio")
+
+
+def classify(path: str):
+    """'lower' / 'higher' / None (not a gated perf metric).
+
+    Walks the dotted path's segments from the leaf outward so nested
+    impl leaves classify by their metric parent (e.g.
+    ``paths.term_k2.lookup_us.fused`` gates as ``lookup_us``)."""
+    for key in reversed(path.split(".")):
+        if "shrink" in key or "per_s" in key or "throughput_ratio" in key:
+            return "higher"
+        if any(key.endswith(s) for s in _LOWER):
+            return "lower"
+    return None
+
+
+def is_timing(path: str) -> bool:
+    """True for wall-clock-derived metrics (jittery with machine load);
+    False for byte/shrink metrics (deterministic per corpus)."""
+    for key in reversed(path.split(".")):
+        if "bytes" in key or "shrink" in key:
+            return False
+        if any(key.endswith(s) for s in ("_us", "_ms", "_s")) or \
+                "per_s" in key or "throughput_ratio" in key:
+            return True
+    return False
+
+
+def iter_metrics(node, prefix: str = "") -> Iterator[Tuple[str, str, float]]:
+    """Yield (path, direction, value) for every gated numeric leaf."""
+    if isinstance(node, dict):
+        for key, val in node.items():
+            path = f"{prefix}.{key}" if prefix else str(key)
+            if isinstance(val, (dict, list)):
+                yield from iter_metrics(val, path)
+            elif isinstance(val, (int, float)) and not isinstance(val, bool):
+                direction = classify(path)
+                if direction:
+                    yield path, direction, float(val)
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            yield from iter_metrics(val, f"{prefix}[{i}]")
+
+
+def compare(baseline: dict, current: dict,
+            threshold: float = DEFAULT_THRESHOLD
+            ) -> Tuple[List[dict], bool]:
+    """Per-metric comparison of two bench JSON trees.
+
+    Returns ``(rows, ok)``: one row per gated baseline metric with keys
+    metric/direction/baseline/current/ratio/status.  ``status`` is
+    'ok', 'regressed' or 'missing'; ``ok`` is True iff no metric
+    regressed or went missing.
+    """
+    cur = {path: val for path, _, val in iter_metrics(current)}
+    rows, ok = [], True
+    for path, direction, base_val in iter_metrics(baseline):
+        row = {"metric": path, "direction": direction,
+               "baseline": base_val, "current": cur.get(path),
+               "ratio": None, "norm_ratio": None, "status": "ok"}
+        if path not in cur:
+            row["status"] = "missing"
+            ok = False
+        elif base_val > 0:
+            row["ratio"] = cur[path] / base_val
+        rows.append(row)
+    # machine-speed factor: the median current/baseline ratio over the
+    # file's timing metrics, per direction (latencies scale up under
+    # load exactly as throughputs scale down)
+    def median(xs):
+        # fewer than 3 samples cannot distinguish load from regression
+        # (1 sample would normalize itself away entirely) — gate raw
+        xs = sorted(xs)
+        n = len(xs)
+        if n < 3:
+            return 1.0
+        return xs[n // 2] if n % 2 else (xs[n // 2 - 1] + xs[n // 2]) / 2
+    speed = {
+        d: median([r["ratio"] for r in rows
+                   if r["ratio"] is not None and r["direction"] == d
+                   and is_timing(r["metric"])]) or 1.0
+        for d in ("lower", "higher")}
+    for r in rows:
+        if r["ratio"] is None:
+            continue
+        ratio = r["ratio"]
+        bad = (ratio > threshold if r["direction"] == "lower"
+               else ratio < 1.0 / threshold)
+        if bad and is_timing(r["metric"]):
+            norm = ratio / speed[r["direction"]]
+            r["norm_ratio"] = norm
+            bad = (norm > threshold if r["direction"] == "lower"
+                   else norm < 1.0 / threshold)
+            if not bad:
+                r["status"] = "jitter-ok"
+        if bad:
+            r["status"] = "regressed"
+            ok = False
+    return rows, ok
+
+
+def print_table(name: str, rows: List[dict], threshold: float) -> None:
+    print(f"\n== {name} (threshold {threshold:g}x) ==")
+    if not rows:
+        print("  (no gated metrics)")
+        return
+    width = max(len(r["metric"]) for r in rows)
+    print(f"  {'metric':<{width}}  {'dir':6} {'baseline':>12} "
+          f"{'current':>12} {'ratio':>7}  status")
+    for r in rows:
+        cur = "---" if r["current"] is None else f"{r['current']:.2f}"
+        ratio = "---" if r["ratio"] is None else f"{r['ratio']:.3f}"
+        mark = "   <-- FAIL" if r["status"] in ("regressed",
+                                                "missing") else ""
+        norm = ("" if r.get("norm_ratio") is None
+                else f" (load-normalized {r['norm_ratio']:.3f})")
+        print(f"  {r['metric']:<{width}}  {r['direction']:6} "
+              f"{r['baseline']:12.2f} {cur:>12} {ratio:>7}  "
+              f"{r['status']}{mark}{norm}")
+
+
+def check_serve_gates(serve: dict) -> bool:
+    """The two absolute gates recorded by benchmarks/bench_partitioned."""
+    ok = True
+    gate = serve.get("gate")
+    if gate is None:
+        print("serve gate: MISSING from BENCH_serve.json")
+        ok = False
+    else:
+        print(f"serve gate [{gate['metric']}]: "
+              f"fused_k2={gate['fused_k2_lookup_us']:.1f}us vs "
+              f"replicated_jnp={gate['replicated_jnp_lookup_us']:.1f}us "
+              f"-> pass={gate['pass']}")
+        ok &= bool(gate["pass"])
+    zgate = serve.get("zipf_bytes_gate")
+    if zgate is None:
+        print("zipf bytes gate: MISSING from BENCH_serve.json")
+        ok = False
+    else:
+        per_k = " ".join(
+            f"K={k}:{g['shrink']:.2f}x(>= {g['floor']:.1f})"
+            for k, g in sorted(zgate["per_k"].items(), key=lambda kv:
+                               int(kv[0])))
+        print(f"zipf bytes gate [{zgate['metric']}]: {per_k} "
+              f"-> pass={zgate['pass']}")
+        ok &= bool(zgate["pass"])
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default=None,
+                    help="directory holding the committed BENCH_*.json "
+                         "snapshot; omit to run only the absolute gates")
+    ap.add_argument("--threshold", type=float, default=float(
+        os.environ.get("REPRO_BENCH_GATE_THRESHOLD", DEFAULT_THRESHOLD)),
+        help="relative slowdown tolerance (default 1.3)")
+    args = ap.parse_args(argv)
+
+    serve_path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    if not os.path.exists(serve_path):
+        print(f"bench gate: {serve_path} is missing — did the bench lane "
+              f"run? (this is exit code {EXIT_MISSING}, not a perf "
+              f"regression)")
+        return EXIT_MISSING
+    try:
+        with open(serve_path) as f:
+            serve = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {serve_path}: {e} "
+              f"(exit code {EXIT_MISSING})")
+        return EXIT_MISSING
+    ok = check_serve_gates(serve)
+
+    if args.baseline_dir is not None:
+        for name in BENCH_FILES:
+            base_path = os.path.join(args.baseline_dir, name)
+            cur_path = os.path.join(REPO_ROOT, name)
+            if not os.path.exists(base_path) or \
+                    os.path.getsize(base_path) == 0:
+                print(f"\n== {name} == no committed baseline; skipping "
+                      f"relative gate (absolute gates still apply)")
+                continue
+            if not os.path.exists(cur_path):
+                print(f"\n== {name} == current run produced no file "
+                      f"(exit code {EXIT_MISSING})")
+                return EXIT_MISSING
+            with open(base_path) as f:
+                baseline = json.load(f)
+            with open(cur_path) as f:
+                current = json.load(f)
+            rows, file_ok = compare(baseline, current, args.threshold)
+            print_table(name, rows, args.threshold)
+            ok &= file_ok
+
+    print(f"\nbench gate: {'PASS' if ok else 'FAIL'}")
+    return EXIT_PASS if ok else EXIT_FAIL
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""Dependency-free fallback linter for ``scripts/ci.sh lint``.
+
+The lint lane prefers ruff (``ruff check`` + ``ruff format --check``,
+what the GitHub workflow installs); containers without it fall back to
+this AST-based subset so the lane still gates something real:
+
+* syntax errors (ast.parse);
+* unused imports — module- and function-scope, counting ``__all__``
+  strings, re-export aliases (``import x as x``) and names used anywhere
+  in the file (docstring-only mentions do NOT count);
+* trailing whitespace and tabs in indentation.
+
+Exit code 0 = clean, 1 = findings (printed as file:line: code message —
+the ruff-ish format editors already parse).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def iter_py_files(roots) -> Iterator[str]:
+    for root in roots:
+        root = os.path.join(REPO_ROOT, root)
+        if os.path.isfile(root):
+            yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+class _Names(ast.NodeVisitor):
+    """Collect every name USED (loaded) plus __all__ export strings."""
+
+    def __init__(self):
+        self.used = set()
+        self.exported = set()
+
+    def visit_Name(self, node):
+        if isinstance(node.ctx, ast.Load):
+            self.used.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node):
+        # `pkg.mod.attr` uses the root binding `pkg`
+        self.generic_visit(node)
+
+    def visit_Assign(self, node):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and tgt.id == "__all__" and \
+                    isinstance(node.value, (ast.List, ast.Tuple)):
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant) and \
+                            isinstance(elt.value, str):
+                        self.exported.add(elt.value)
+        self.generic_visit(node)
+
+
+def _binding(alias: ast.alias) -> str:
+    """The local name an import introduces (`a.b` binds `a`)."""
+    name = alias.asname or alias.name
+    return name.split(".")[0]
+
+
+def unused_imports(tree: ast.AST, is_init: bool) -> List[Tuple[int, str]]:
+    names = _Names()
+    names.visit(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if isinstance(node, ast.ImportFrom) and \
+                    node.module == "__future__":
+                continue                      # used implicitly
+            if is_init and isinstance(node, ast.ImportFrom) and \
+                    node.module is None:
+                continue    # `from . import sub` in __init__: package API
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if alias.asname == alias.name:
+                    continue                  # explicit re-export idiom
+                bound = _binding(alias)
+                if bound in names.used or bound in names.exported:
+                    continue
+                findings.append(
+                    (node.lineno, f"F401 `{alias.asname or alias.name}` "
+                                  f"imported but unused"))
+    return findings
+
+
+def whitespace_findings(src: str) -> List[Tuple[int, str]]:
+    findings = []
+    for i, line in enumerate(src.splitlines(), 1):
+        if line != line.rstrip():
+            findings.append((i, "W291 trailing whitespace"))
+        stripped = line.lstrip(" \t")
+        if "\t" in line[:len(line) - len(stripped)]:
+            findings.append((i, "W191 tab in indentation"))
+    return findings
+
+
+def lint_file(path: str) -> List[str]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    rel = os.path.relpath(path, REPO_ROOT)
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno}: E999 {e.msg}"]
+    is_init = os.path.basename(path) == "__init__.py"
+    findings = unused_imports(tree, is_init) + whitespace_findings(src)
+    lines = src.splitlines()
+    findings = [(line, msg) for line, msg in findings
+                if "# noqa" not in lines[line - 1]]
+    return [f"{rel}:{line}: {msg}" for line, msg in sorted(findings)]
+
+
+def main(argv=None) -> int:
+    roots = (argv if argv else
+             ["src/repro", "tests", "benchmarks", "examples", "scripts"])
+    out = []
+    for path in iter_py_files(roots):
+        out.extend(lint_file(path))
+    for line in out:
+        print(line)
+    print(f"minilint: {len(out)} finding(s)"
+          if out else "minilint: clean")
+    return 1 if out else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

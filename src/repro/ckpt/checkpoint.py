@@ -142,6 +142,12 @@ def save_index(index_dir: str, index: Any) -> str:
         kind, n_shards = "partitioned", index.n_shards
         common = {"term_to_shard": index.term_to_shard,
                   "range_lo": index.range_lo}
+        # sub-shard / fence metadata (absent on legacy indexes; loaders
+        # treat missing keys as None / derive them)
+        for name in ("range_hi", "split_term", "split_doc"):
+            a = getattr(index, name)
+            if a is not None:
+                common[name] = a
         shard = lambda k: {"term_offsets": index.term_offsets[k],
                            "doc_ids": index.doc_ids[k],
                            "values": index.values[k]}
@@ -226,26 +232,34 @@ def load_index(index_dir: str) -> Any:
         common = {n: z[n] for n in z.files}
     static = dict(n_docs=m["n_docs"], vocab_size=m["vocab_size"],
                   n_b=m["n_b"], functions=tuple(m["functions"]))
+    from ..core.index import build_fences
     if m["kind"] == "segment":
         s = load_index_shard(index_dir, 0)
+        doc_ids = jnp.asarray(s["doc_ids"])
         return SegmentInvertedIndex(
             term_offsets=jnp.asarray(s["term_offsets"]),
-            doc_ids=jnp.asarray(s["doc_ids"]),
+            doc_ids=doc_ids,
             values=jnp.asarray(s["values"]),
+            fences=build_fences(doc_ids),
             idf=jnp.asarray(common["idf"]),
             doc_len=jnp.asarray(common["doc_len"]),
             seg_len=jnp.asarray(common["seg_len"]), **static)
     shards = [load_index_shard(index_dir, k) for k in range(m["n_shards"])]
+    doc_ids = jnp.asarray(np.stack([s["doc_ids"] for s in shards]))
+    opt = lambda n: (jnp.asarray(common[n]) if n in common else None)
     return PartitionedIndex(
         term_offsets=jnp.asarray(
             np.stack([s["term_offsets"] for s in shards])),
-        doc_ids=jnp.asarray(np.stack([s["doc_ids"] for s in shards])),
+        doc_ids=doc_ids,
         values=jnp.asarray(np.stack([s["values"] for s in shards])),
         term_to_shard=jnp.asarray(common["term_to_shard"]),
         range_lo=jnp.asarray(common["range_lo"]),
         idf=jnp.asarray(common["idf"]),
         doc_len=jnp.asarray(common["doc_len"]),
         seg_len=jnp.asarray(common["seg_len"]),
+        fences=build_fences(doc_ids),
+        range_hi=opt("range_hi"),
+        split_term=opt("split_term"), split_doc=opt("split_doc"),
         n_shards=m["n_shards"], **static)
 
 

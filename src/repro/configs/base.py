@@ -6,9 +6,8 @@ smoke tests). Shapes are attached per-arch as ``ShapeConfig`` entries.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 
 @dataclass(frozen=True)

@@ -148,6 +148,19 @@ class PostingRun:
         with np.load(self.path) as z:
             return z["term_ids"], z["doc_ids"], z["values"]
 
+    def ids(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(term_ids, doc_ids) WITHOUT the values payload.
+
+        The hot-term sub-shard planner needs the doc ids of a few split
+        terms before the stage-4 assembly pass; lazy npz member access
+        keeps the values bulk (~n_b*n_f*4 bytes/row vs 8) on disk for
+        spilled runs, so the extra planning pass stays O(id bytes).
+        """
+        if self.term_ids is not None:
+            return self.term_ids, self.doc_ids
+        with np.load(self.path) as z:
+            return z["term_ids"], z["doc_ids"]
+
     def term_counts(self, vocab_size: int) -> np.ndarray:
         """(|v|,) int64 postings per term in this run.
 

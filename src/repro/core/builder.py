@@ -25,7 +25,7 @@ oracle and benchmark baseline.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +33,7 @@ import numpy as np
 
 from ..configs.base import SeineConfig
 from .index import SegmentInvertedIndex, build_from_rows
-from .interactions import (FUNCTION_NAMES, doc_interactions,
-                           init_interaction_params)
+from .interactions import doc_interactions, init_interaction_params
 from .providers import EmbeddingProvider
 from .vocab import Vocabulary
 

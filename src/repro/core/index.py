@@ -16,11 +16,50 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Protocol, Sequence, Tuple, runtime_checkable
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Default posting-tile width for the two-level serving bisect: the fused
+# kernel holds one fence row (every POSTING_TILE-th doc id, built here at
+# index-build time) plus ONE posting tile in VMEM — O(Nmax/T + T) instead
+# of the whole O(Nmax) doc-id row — so shard capacity is no longer VMEM-
+# bound (~1-4M postings before; tens of millions now).  sqrt(Nmax) is the
+# VMEM-optimal T; 256 covers the 64K-16M postings/shard band and keeps
+# the tile DMA above the ~512 B efficiency floor.
+POSTING_TILE = 256
+
+
+def fence_count(n: int, tile: int = POSTING_TILE) -> int:
+    """Number of fence entries covering ``n`` postings at ``tile`` spacing
+    (at least one, so degenerate empty shards keep static shapes)."""
+    return -(-max(int(n), 1) // int(tile))
+
+
+def build_fences(doc_ids, tile: int = POSTING_TILE):
+    """Every ``tile``-th doc id along the last axis: ``(..., N)`` ->
+    ``(..., ceil(N/tile))``.
+
+    The fence array is the first level of the serving bisect: restricted
+    to one term's posting range [lo, hi) — always sorted, because a range
+    never crosses a posting-list boundary — the fences bracket the single
+    tile that can contain the lookup target.  The tail is padded with
+    int32 max so fence values stay monotone past the data; padding fences
+    are never *consulted* (the fence bisect is clamped to the tiles
+    intersecting [lo, hi)), so the pad value cannot affect results.
+    Works on numpy and jax arrays (jit-traceable: shapes are static).
+    """
+    xp = jnp if isinstance(doc_ids, jnp.ndarray) else np
+    n = doc_ids.shape[-1]
+    f = fence_count(n, tile)
+    pad = f * tile - n
+    if pad:
+        width = [(0, 0)] * (doc_ids.ndim - 1) + [(0, pad)]
+        doc_ids = xp.pad(doc_ids, width,
+                         constant_values=np.iinfo(np.int32).max)
+    return doc_ids[..., ::tile]
 
 
 def _bisect(doc_ids: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
@@ -84,7 +123,8 @@ class PairLookupIndex(Protocol):
                      ) -> jnp.ndarray: ...
 
     def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
-                  *, impl: str = None) -> jnp.ndarray: ...
+                  *, impl: str = None, tile: Optional[int] = None
+                  ) -> jnp.ndarray: ...
 
 
 @jax.tree_util.register_dataclass
@@ -101,6 +141,11 @@ class SegmentInvertedIndex:
     n_b: int = dataclasses.field(metadata=dict(static=True), default=1)
     functions: Tuple[str, ...] = dataclasses.field(
         metadata=dict(static=True), default=())
+    # (ceil(nnz/POSTING_TILE),) int32 — every POSTING_TILE-th doc id, the
+    # level-1 array of the tiled serving bisect.  Built by the CSR build
+    # paths; None (legacy instances / old checkpoints) makes the lookup op
+    # derive it on the fly from doc_ids.
+    fences: Optional[jnp.ndarray] = None
 
     @property
     def nnz(self) -> int:
@@ -110,7 +155,9 @@ class SegmentInvertedIndex:
     def nbytes(self) -> int:
         return sum(int(np.prod(a.shape)) * a.dtype.itemsize
                    for a in (self.term_offsets, self.doc_ids, self.values,
-                             self.idf, self.doc_len, self.seg_len))
+                             self.idf, self.doc_len, self.seg_len,
+                             self.fences)
+                   if a is not None)
 
     @property
     def avg_doc_len(self) -> jnp.ndarray:
@@ -140,7 +187,8 @@ class SegmentInvertedIndex:
         return vals * found[..., None, None]
 
     def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
-                  *, impl: str = None) -> jnp.ndarray:
+                  *, impl: str = None, tile: Optional[int] = None
+                  ) -> jnp.ndarray:
         """Stack rows for the query terms (Eq. 4).
 
         query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f).
@@ -156,8 +204,10 @@ class SegmentInvertedIndex:
           ``dist.sharding.shard_index``);
         * ``"interpret"`` — force the Pallas interpreter (parity tests).
 
-        Every impl is held bitwise-equal to ``csr_lookup_positions`` by
-        tests/test_kernels.py::TestCsrLookup.
+        ``tile`` overrides the kernel's posting-tile width (default
+        ``POSTING_TILE``); the jnp path ignores it (no tiling there).
+        Every impl x tile is held bitwise-equal to
+        ``csr_lookup_positions`` by tests/test_kernels.py::TestCsrLookup.
         """
         if impl not in (None, "fused", "jnp", "interpret"):
             raise ValueError(f"unknown lookup impl {impl!r}; supported: "
@@ -170,7 +220,8 @@ class SegmentInvertedIndex:
         return csr_lookup(
             self.term_offsets[None], self.doc_ids[None], self.values[None],
             None, None, query_terms, doc_ids,
-            interpret=True if impl == "interpret" else None)
+            fences=None if self.fences is None else self.fences[None],
+            tile=tile, interpret=True if impl == "interpret" else None)
 
 
 def merge_run_parts(parts: list, t_lo: int, t_hi: int, *, n_b: int,
@@ -260,6 +311,7 @@ def build_shard_from_runs(runs, t_lo: int, t_hi: int, *, idf: np.ndarray,
         term_offsets=jnp.asarray(offsets),
         doc_ids=jnp.asarray(d.astype(np.int32)),
         values=jnp.asarray(v.astype(np.float32)),
+        fences=jnp.asarray(build_fences(d.astype(np.int32))),
         idf=jnp.asarray(np.asarray(idf)[t_lo:t_hi].astype(np.float32)),
         doc_len=jnp.asarray(np.asarray(doc_len).astype(np.float32)),
         seg_len=jnp.asarray(np.asarray(seg_len).astype(np.float32)),
@@ -279,10 +331,12 @@ def build_from_rows(doc_ids: np.ndarray, term_ids: np.ndarray,
     counts = np.bincount(t, minlength=vocab_size)
     offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
     n_b = values.shape[1]
+    sorted_docs = doc_ids[order].astype(np.int32)
     return SegmentInvertedIndex(
         term_offsets=jnp.asarray(offsets),
-        doc_ids=jnp.asarray(doc_ids[order].astype(np.int32)),
+        doc_ids=jnp.asarray(sorted_docs),
         values=jnp.asarray(values[order].astype(np.float32)),
+        fences=jnp.asarray(build_fences(sorted_docs)),
         idf=jnp.asarray(idf.astype(np.float32)),
         doc_len=jnp.asarray(doc_len.astype(np.float32)),
         seg_len=jnp.asarray(seg_len.astype(np.float32)),

@@ -15,7 +15,7 @@ from typing import Any, Dict, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import mlp_apply, mlp_init
+from ..models.layers import mlp_init
 
 FUNCTION_NAMES: Tuple[str, ...] = (
     "tf", "idf_indicator", "dot", "cosine", "gauss_max",

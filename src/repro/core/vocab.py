@@ -6,7 +6,7 @@ v-d interaction math runs on device (builder.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

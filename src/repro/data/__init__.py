@@ -1,2 +1,1 @@
 from . import batching, graph, metrics, recsys_data, synth_corpus  # noqa: F401
-from .synth_corpus import IRDataset, generate

@@ -5,11 +5,10 @@ checkpointable (fault-tolerant resume restores the stream position).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 
-from .synth_corpus import IRDataset
 
 
 def pad_queries(queries: List[np.ndarray], vocab_map, q_len: int = 8) -> np.ndarray:

@@ -1,7 +1,7 @@
 """Synthetic Criteo-like CTR data + sequential-recommendation streams."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -11,8 +11,8 @@ Generator design (so SEINE's claims are actually exercisable):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -111,3 +111,51 @@ def generate(cfg: SeineConfig, *, seed: int = 0,
     return IRDataset(docs=docs, queries=queries, qrels=qrels,
                      n_raw_tokens=n_raw, doc_topics=doc_topics,
                      query_topics=query_topics)
+
+
+ZIPF_FUNCTIONS = ("tf", "idf_indicator", "dot", "cosine", "gauss_max",
+                  "linear_agg", "max_op", "mlp_emb", "log_cond_prob")
+
+
+def build_zipfian_index(n_docs: int = 64, vocab: int = 40, *,
+                        n_hot: int = 1, tail_decay: float = None,
+                        min_tail: int = 2, n_b: int = 2,
+                        doc_len: float = 10.0, seg_len: float = 5.0,
+                        functions: Tuple[str, ...] = ZIPF_FUNCTIONS,
+                        seed: int = 0):
+    """A synthetic SegmentInvertedIndex with a Zipfian hot-term head.
+
+    The ``n_hot`` leading terms post in EVERY doc (the stopword band the
+    vocabulary's keep_frac normally trims); the tail is either uniformly
+    sparse (``tail_decay=None``: ``min_tail`` postings per term) or
+    decays ``~n_docs/(w+1)**tail_decay`` with the ``min_tail`` floor.
+    This is the corpus shape that defeats term-aligned partitioning —
+    one list dominating ``nnz/K`` pins every shard's padded width at it
+    — and must trigger doc-range sub-sharding instead.  Values are
+    random (lookup cost and byte accounting depend on the CSR structure,
+    not the payload), shared by the oracle-parity tests
+    (tests/conftest.py) and the CI bytes gate
+    (benchmarks/bench_partitioned.py) so both exercise the SAME
+    distribution.
+    """
+    from ..core.index import build_from_rows
+
+    rng = np.random.RandomState(seed)
+    doc_ids, term_ids = [], []
+    for t in range(n_hot):
+        doc_ids.append(np.arange(n_docs))
+        term_ids.append(np.full(n_docs, t, np.int64))
+    for w in range(n_hot, vocab):
+        c = min_tail if tail_decay is None else \
+            max(int(n_docs / (w + 1) ** tail_decay), min_tail)
+        d = rng.choice(n_docs, size=min(c, n_docs), replace=False)
+        doc_ids.append(np.sort(d))
+        term_ids.append(np.full(d.size, w, np.int64))
+    doc_ids = np.concatenate(doc_ids)
+    term_ids = np.concatenate(term_ids)
+    vals = rng.rand(len(doc_ids), n_b, len(functions)).astype(np.float32)
+    return build_from_rows(
+        doc_ids, term_ids, vals, idf=np.ones(vocab, np.float32),
+        doc_len=np.full(n_docs, doc_len, np.float32),
+        seg_len=np.full((n_docs, n_b), seg_len, np.float32),
+        n_docs=n_docs, vocab_size=vocab, functions=tuple(functions))

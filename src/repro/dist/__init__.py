@@ -29,8 +29,8 @@ from .partition import (PartitionedIndex, merged_term_counts,
 from .sharding import (data_axes, fit_spec, gnn_param_rules, index_shardings,
                        lm_cache_spec, lm_param_rules, lm_param_rules_fsdp,
                        opt_state_shardings, partition_index,
-                       partitioned_index_shardings, plan_term_ranges,
-                       recsys_param_rules, shard_index,
+                       partitioned_index_shardings, plan_posting_ranges,
+                       plan_term_ranges, recsys_param_rules, shard_index,
                        shard_partitioned_index, tree_shardings)
 from .sp_decode import (combine_decode_stats, local_decode_stats,
                         sp_decode_attention)
@@ -43,7 +43,8 @@ __all__ = [
     "data_axes", "fit_spec", "gnn_param_rules", "index_shardings",
     "lm_cache_spec", "lm_param_rules", "lm_param_rules_fsdp",
     "opt_state_shardings", "partition_index",
-    "partitioned_index_shardings", "plan_term_ranges",
+    "partitioned_index_shardings", "plan_posting_ranges",
+    "plan_term_ranges",
     "recsys_param_rules", "shard_index", "shard_partitioned_index",
     "tree_shardings",
     "combine_decode_stats", "local_decode_stats", "sp_decode_attention",

@@ -72,19 +72,46 @@ class PartitionedIndex:
     n_shards: int = dataclasses.field(metadata=dict(static=True), default=1)
     functions: Tuple[str, ...] = dataclasses.field(
         metadata=dict(static=True), default=())
+    # (K, ceil(Nmax/POSTING_TILE)) int32 — per-shard fence rows for the
+    # kernel's two-level bisect (built at merge time; None on legacy
+    # checkpoints -> derived on the fly by the lookup op)
+    fences: Optional[jnp.ndarray] = None
+    # (K,) int32 — last global term (inclusive) with postings in shard k.
+    # Without doc-range sub-shards this is just the next range_lo minus
+    # one; with them, boundary terms appear in BOTH neighbours' ranges.
+    # None (legacy checkpoints) falls back to table-based ownership.
+    range_hi: Optional[jnp.ndarray] = None
+    # (K,) int32 doc-range sub-shard tables: split_term[k] is the global
+    # term whose posting list CONTINUES into shard k from shard k-1 (-1
+    # when shard k starts on a fresh term), split_doc[k] the first doc id
+    # shard k owns of it.  None when no hot term was split — then routing
+    # is per term and the kernel keeps its (Q,)-stream fast path.
+    split_term: Optional[jnp.ndarray] = None
+    split_doc: Optional[jnp.ndarray] = None
 
     @property
     def nnz(self) -> int:
         """True stored pairs (padding excluded)."""
         return int(np.asarray(self.term_offsets[:, -1]).sum())
 
+    def _sharded_arrays(self):
+        """Arrays stacked on the leading K axis (split over devices)."""
+        return tuple(a for a in (self.term_offsets, self.doc_ids,
+                                 self.values, self.fences) if a is not None)
+
+    def _replicated_arrays(self):
+        """O(|v|) / O(n_docs) / O(K) leftovers every device holds."""
+        return tuple(a for a in (self.term_to_shard, self.range_lo,
+                                 self.range_hi, self.split_term,
+                                 self.split_doc, self.idf, self.doc_len,
+                                 self.seg_len) if a is not None)
+
     @property
     def nbytes(self) -> int:
         """Total bytes across all shards (padding included)."""
         return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                   for a in (self.term_offsets, self.doc_ids, self.values,
-                             self.term_to_shard, self.range_lo, self.idf,
-                             self.doc_len, self.seg_len))
+                   for a in self._sharded_arrays() +
+                   self._replicated_arrays())
 
     @property
     def per_device_nbytes(self) -> int:
@@ -94,10 +121,9 @@ class PartitionedIndex:
         For what the *current* placement actually costs per device, use
         :attr:`placed_per_device_nbytes`."""
         sharded = sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                      for a in (self.term_offsets, self.doc_ids, self.values))
+                      for a in self._sharded_arrays())
         replicated = sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                         for a in (self.term_to_shard, self.range_lo,
-                                   self.idf, self.doc_len, self.seg_len))
+                         for a in self._replicated_arrays())
         return sharded // self.n_shards + replicated
 
     @property
@@ -107,9 +133,7 @@ class PartitionedIndex:
         the mesh's model axis does not tile K and the divisibility guard
         replicated the stacked shards)."""
         total = 0
-        for a in (self.term_offsets, self.doc_ids, self.values,
-                  self.term_to_shard, self.range_lo, self.idf,
-                  self.doc_len, self.seg_len):
+        for a in self._sharded_arrays() + self._replicated_arrays():
             shape = (a.sharding.shard_shape(a.shape)
                      if hasattr(a, "sharding") else a.shape)
             total += int(np.prod(shape)) * a.dtype.itemsize
@@ -151,34 +175,45 @@ class PartitionedIndex:
             from ..kernels.csr_lookup import lookup_pairs_ref
             return lookup_pairs_ref(
                 self.term_offsets, self.doc_ids, self.values,
-                self.term_to_shard, self.range_lo, term_ids, doc_ids)
+                self.term_to_shard, self.range_lo, term_ids, doc_ids,
+                self.split_term, self.split_doc)
         w = term_ids.clip(0)
         d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
         shard_of = self.term_to_shard.at[w].get(mode="clip")
         valid = term_ids >= 0
+        # ownership: term-range based when range_hi is known (a doc-range
+        # sub-sharded term is "owned" by every sub-shard — each stores a
+        # disjoint doc slice, so at most one partial is nonzero per pair
+        # and the summation merge stays exact); legacy table equality
+        # otherwise (pre-sub-shard checkpoints, where both are the same)
+        range_hi = self.range_hi
 
-        def partial(offsets_k, docs_k, values_k, lo_k, k):
-            owned = (shard_of == k) & valid
+        def partial(offsets_k, docs_k, values_k, lo_k, hi_k, k):
+            owned = ((shard_of == k) if range_hi is None
+                     else (w >= lo_k) & (w <= hi_k)) & valid
             local = (w - lo_k).clip(0)
             pos, in_list = csr_lookup_positions(offsets_k, docs_k, local, d)
             found = in_list & owned
             vals = values_k.at[pos].get(mode="clip")
             return vals * found[..., None, None]
 
+        hi = (self.range_lo if range_hi is None else range_hi)
         parts = jax.vmap(partial)(
             self.term_offsets, self.doc_ids, self.values, self.range_lo,
-            jnp.arange(self.n_shards, dtype=self.term_to_shard.dtype))
+            hi, jnp.arange(self.n_shards, dtype=self.term_to_shard.dtype))
         return parts.sum(axis=0)
 
     def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
-                  *, impl: str = None) -> jnp.ndarray:
+                  *, impl: str = None, tile: Optional[int] = None
+                  ) -> jnp.ndarray:
         """query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f).
 
         The serving hot path.  ``impl=None``/``"fused"`` dispatches to
         ``kernels.csr_lookup`` (fused Pallas kernel on TPU, its routed
         jnp lowering on CPU); ``"jnp"`` keeps the SPMD partial-sum
         composition for mesh-placed serving; ``"interpret"`` forces the
-        Pallas interpreter (the oracle-parity sweep).
+        Pallas interpreter (the oracle-parity sweep).  ``tile`` overrides
+        the kernel's posting-tile width (jnp path ignores it).
         """
         if impl not in (None, "fused", "jnp", "interpret"):
             raise ValueError(f"unknown lookup impl {impl!r}; supported: "
@@ -191,6 +226,8 @@ class PartitionedIndex:
         return csr_lookup(
             self.term_offsets, self.doc_ids, self.values,
             self.term_to_shard, self.range_lo, query_terms, doc_ids,
+            fences=self.fences, split_term=self.split_term,
+            split_doc=self.split_doc, tile=tile,
             interpret=True if impl == "interpret" else None)
 
 
@@ -215,15 +252,18 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
                           doc_len: np.ndarray, seg_len: np.ndarray,
                           n_docs: int, vocab_size: int, n_b: int,
                           functions: Tuple[str, ...],
-                          mesh=None) -> "PartitionedIndex":
+                          mesh=None, split_hot: bool = True
+                          ) -> "PartitionedIndex":
     """Assemble a K-shard PartitionedIndex directly from term-sorted runs.
 
     The stage-4 merger of the streaming build (core.build_pipeline): per-
     term counts accumulate run-by-run into the global CSR *boundary* array
     (O(|v|) — the skeleton's doc_ids/values, the O(nnz) bulk, are never
-    concatenated globally), ``plan_term_ranges`` cuts it into K nnz-
-    balanced term ranges, and each shard's local CSR is merged
-    independently from the runs via
+    concatenated globally), ``plan_posting_ranges`` cuts it into K nnz-
+    balanced ranges — sub-sharding hot Zipfian terms by doc range when a
+    single list exceeds the even split (``split_hot=False`` restores the
+    old term-aligned-only plan and its skew warning) — and each shard's
+    local CSR is merged independently from the runs via
     :func:`~repro.core.index.shard_csr_from_runs` — the per-pod unit of
     work at production scale.  Padding/stacking semantics are identical to
     the legacy ``partition_index`` (offsets pinned at the shard's nnz,
@@ -231,7 +271,9 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
     itself is now a compatibility wrapper over this merger, so both paths
     produce bitwise-identical shards.
     """
-    from .sharding import plan_term_ranges, shard_partitioned_index
+    from ..core.index import build_fences
+    from .sharding import (plan_posting_ranges, plan_term_ranges,
+                           shard_partitioned_index)
 
     counts = merged_term_counts(runs, vocab_size)
     # guard (shared by every build path, incl. shard-native): K beyond the
@@ -245,24 +287,42 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
             f"zero-nnz shards", stacklevel=2)
         k = max(n_pop, 1)
     offs = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
-    bounds = plan_term_ranges(offs, k)
-    # repair degenerate quantile cuts: with k <= populated terms, every
-    # range can (and must) own at least one populated term — a skewed
-    # distribution (one hot list swallowing several quantile targets)
-    # otherwise yields zero-nnz shards whose padding still K-multiplies
-    # the stacked arrays.  Left clamp gives range i-1 its first populated
-    # term; right clamp leaves k-i populated terms for the ranges after
-    # the cut.  Both clamps are no-ops for plans that are already valid,
-    # so balanced quantile cuts pass through untouched.
-    pop = np.flatnonzero(counts)
-    if k > 1 and pop.size >= k:
-        for i in range(1, k):
-            nxt = int(np.searchsorted(pop, bounds[i - 1]))
-            lo_min = int(pop[nxt]) + 1
-            hi_max = int(pop[pop.size - (k - i)])
-            bounds[i] = min(max(int(bounds[i]), lo_min), hi_max)
-    spans = np.diff(bounds)
-    local_nnz = offs[bounds[1:]] - offs[bounds[:-1]]
+    ranks = np.zeros(k + 1, np.int64)
+    if split_hot:
+        bounds, ranks = plan_posting_ranges(offs, k)
+    else:
+        bounds = plan_term_ranges(offs, k)
+    if not ranks.any():
+        # pure term-aligned plan: repair degenerate quantile cuts.  With
+        # k <= populated terms, every range can (and must) own at least
+        # one populated term — a skewed distribution (one hot list
+        # swallowing several quantile targets) otherwise yields zero-nnz
+        # shards whose padding still K-multiplies the stacked arrays.
+        # Left clamp gives range i-1 its first populated term; right
+        # clamp leaves k-i populated terms for the ranges after the cut.
+        # Both clamps are no-ops for plans that are already valid, so
+        # balanced quantile cuts pass through untouched.  (Sub-shard
+        # plans fix degeneracy on posting positions inside
+        # plan_posting_ranges instead.)
+        pop = np.flatnonzero(counts)
+        if k > 1 and pop.size >= k:
+            for i in range(1, k):
+                nxt = int(np.searchsorted(pop, bounds[i - 1]))
+                lo_min = int(pop[nxt]) + 1
+                hi_max = int(pop[pop.size - (k - i)])
+                bounds[i] = min(max(int(bounds[i]), lo_min), hi_max)
+
+    # shard i's term range is [t_first[i], t_last[i]] INCLUSIVE: cut i
+    # with ranks[i] > 0 puts term bounds[i] in both shard i-1 and shard i
+    t_first = bounds[:-1].copy()
+    t_last = np.empty(k, np.int64)
+    for i in range(k):
+        t_last[i] = bounds[i + 1] - 1 if ranks[i + 1] == 0 \
+            else bounds[i + 1]
+    t_last = np.maximum(t_last, t_first)          # empty-range guard
+    spans = t_last - t_first + 1
+    pos_bounds = offs[bounds] + ranks             # global posting cuts
+    local_nnz = np.diff(pos_bounds)
     vmax = max(int(spans.max()), 1)
     nmax = max(int(local_nnz.max()), 1)
     ideal = -(-int(offs[-1]) // k)          # ceil(nnz / k)
@@ -272,21 +332,57 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
             f"holds {nmax} postings vs an even split of {ideal}; padded "
             f"storage is ~{k * nmax / max(int(offs[-1]), 1):.1f}x nnz and "
             f"per-device bytes will not shrink ~1/K (hot term dominates; "
-            f"see ROADMAP: sub-split hot terms by doc range)",
+            f"doc-range sub-sharding is disabled or was defeated)",
             stacklevel=2)
 
+    # split tables: the doc id where each mid-list cut lands.  A cut
+    # ``ranks[i]`` postings into term w needs w's globally doc-sorted
+    # posting list, merged across runs — an ids-only prepass (the values
+    # payload stays on disk for spilled runs; only the few hot terms'
+    # doc ids are ever concatenated).
+    split_term = np.full(k, -1, np.int32)
+    split_doc = np.zeros(k, np.int32)
+    hot = sorted({int(bounds[i]) for i in range(1, k) if ranks[i] > 0})
+    if hot:
+        hot_docs = {w: [] for w in hot}
+        for run in runs:
+            t, d = run.ids()
+            for w in hot:
+                sl = int(np.searchsorted(t, w, side="left"))
+                sr = int(np.searchsorted(t, w, side="right"))
+                if sr > sl:
+                    hot_docs[w].append(np.asarray(d[sl:sr]).copy())
+        merged = {w: np.sort(np.concatenate(ps))
+                  for w, ps in hot_docs.items()}
+        for i in range(1, k):
+            if ranks[i] > 0:
+                w = int(bounds[i])
+                split_term[i] = w
+                split_doc[i] = int(merged[w][int(ranks[i])])
+
     n_f = len(functions)
-    # ONE pass over the runs: slice every shard's term range per loaded
-    # run (a spilled run's npz is read once, not once per shard).  Spilled
-    # runs get copied slices so each loaded payload is released before the
-    # next load — resident overhead stays one run above the output arrays;
-    # resident runs keep views (copying would only double memory, the
-    # source arrays live on regardless — the partition_index compat path).
+    # ONE pass over the runs: slice every shard's range per loaded run (a
+    # spilled run's values payload is read once, not once per shard).
+    # Spilled runs get copied slices so each loaded payload is released
+    # before the next load — resident overhead stays one run above the
+    # output arrays; resident runs keep views (copying would only double
+    # memory, the source arrays live on regardless — the partition_index
+    # compat path).  A mid-list cut lands inside its term's run slice at
+    # the doc boundary: rows of term w with doc < split_doc go left.
     parts: list = [[] for _ in range(k)]
     for run in runs:
         spilled = getattr(run, "term_ids", None) is None
         t, d, v = run.load()
-        cuts = np.searchsorted(t, bounds)
+        cuts = np.empty(k + 1, np.int64)
+        cuts[0], cuts[k] = 0, t.shape[0]
+        for i in range(1, k):
+            c = int(np.searchsorted(t, bounds[i], side="left"))
+            if ranks[i] > 0:
+                sr = int(np.searchsorted(t, bounds[i], side="right"))
+                c += int(np.searchsorted(d[c:sr], split_doc[i],
+                                         side="left"))
+            cuts[i] = c
+        cuts = np.maximum.accumulate(cuts)
         for i in range(k):
             lo, hi = int(cuts[i]), int(cuts[i + 1])
             if hi > lo:
@@ -297,7 +393,7 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
     doc_ids = np.full((k, nmax), int(n_docs), np.int32)
     values = np.zeros((k, nmax, n_b, n_f), np.float32)
     for i in range(k):
-        t_lo, t_hi = int(bounds[i]), int(bounds[i + 1])
+        t_lo, t_hi = int(t_first[i]), int(t_last[i]) + 1
         span = t_hi - t_lo
         loc_offs, loc_docs, loc_vals = merge_run_parts(
             parts[i], t_lo, t_hi, n_b=n_b, n_f=n_f)
@@ -307,19 +403,34 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
         term_offsets[i, span + 1:] = n
         doc_ids[i, :n] = loc_docs
         values[i, :n] = loc_vals
-    term_to_shard = np.repeat(np.arange(k, dtype=np.int32), spans)
+    # routing: term -> FIRST owning shard.  Sub-shard continuation terms
+    # belong (in the table) to the earlier shard; later sub-shards are
+    # reached by counting split boundaries <= the candidate doc
+    # (kernels.csr_lookup.route_pairs).
+    table_bnd = np.empty(k + 1, np.int64)
+    table_bnd[0], table_bnd[k] = 0, vocab_size
+    for i in range(1, k):
+        table_bnd[i] = bounds[i] + (1 if ranks[i] > 0 else 0)
+    table_bnd = np.maximum.accumulate(table_bnd)
+    term_to_shard = np.repeat(np.arange(k, dtype=np.int32),
+                              np.diff(table_bnd))
+    any_split = bool((split_term >= 0).any())
 
     pidx = PartitionedIndex(
         term_offsets=jnp.asarray(term_offsets),
         doc_ids=jnp.asarray(doc_ids),
         values=jnp.asarray(values),
         term_to_shard=jnp.asarray(term_to_shard),
-        range_lo=jnp.asarray(bounds[:-1].astype(np.int32)),
+        range_lo=jnp.asarray(t_first.astype(np.int32)),
         idf=jnp.asarray(np.asarray(idf).astype(np.float32)),
         doc_len=jnp.asarray(np.asarray(doc_len).astype(np.float32)),
         seg_len=jnp.asarray(np.asarray(seg_len).astype(np.float32)),
         n_docs=int(n_docs), vocab_size=int(vocab_size), n_b=int(n_b),
-        n_shards=int(k), functions=tuple(functions))
+        n_shards=int(k), functions=tuple(functions),
+        fences=jnp.asarray(build_fences(doc_ids)),
+        range_hi=jnp.asarray(t_last.astype(np.int32)),
+        split_term=jnp.asarray(split_term) if any_split else None,
+        split_doc=jnp.asarray(split_doc) if any_split else None)
     if mesh is not None:
         pidx = shard_partitioned_index(pidx, mesh)
     return pidx

@@ -20,7 +20,6 @@ import re
 from typing import Any, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -190,7 +189,8 @@ def index_shardings(mesh: Mesh, index) -> Any:
         term_offsets=rep, doc_ids=rep, values=vals, idf=rep,
         doc_len=rep, seg_len=rep, n_docs=index.n_docs,
         vocab_size=index.vocab_size, n_b=index.n_b,
-        functions=index.functions)
+        functions=index.functions,
+        fences=None if index.fences is None else rep)
 
 
 def shard_index(index, mesh: Mesh):
@@ -206,7 +206,8 @@ def shard_index(index, mesh: Mesh):
                                      getattr(sh, f.name))
               for f in dataclasses.fields(index)
               if f.name in ("term_offsets", "doc_ids", "values", "idf",
-                            "doc_len", "seg_len")}
+                            "doc_len", "seg_len", "fences")
+              and getattr(index, f.name) is not None}
     return dataclasses.replace(index, **arrays)
 
 
@@ -235,7 +236,69 @@ def plan_term_ranges(term_offsets, k: int) -> np.ndarray:
     return np.maximum.accumulate(bounds).clip(0, v)
 
 
-def partition_index(index, k: int, *, mesh: Mesh = None):
+def plan_posting_ranges(term_offsets, k: int):
+    """Split the posting space into ``k`` nnz-balanced ranges, allowing
+    cuts INSIDE hot posting lists (doc-range sub-sharding).
+
+    :func:`plan_term_ranges` can only cut at term boundaries, so one
+    Zipfian term whose list exceeds the even split ``ceil(nnz/k)`` forces
+    every other shard to pad up to it (the merger's "skewed posting
+    lists" warning) and defeats the ~1/K per-device byte claim.  Here
+    each k-quantile cut snaps to a term boundary EXCEPT when the term
+    straddling the quantile target is hot (its list alone is larger than
+    an even share): then the cut lands exactly on the target, mid-list,
+    and the term is sub-sharded by doc range — merge stays exact because
+    sub-shard doc ranges are disjoint, so at most one shard owns any
+    (term, doc) pair.
+
+    Returns ``(bounds, ranks)``, both (k+1,) int64: cut ``i`` sits
+    ``ranks[i]`` postings into term ``bounds[i]`` — ``ranks[i] == 0`` is
+    the term-aligned case (shard i-1 ends at ``bounds[i]`` exclusive,
+    exactly a :func:`plan_term_ranges` cut), ``ranks[i] > 0`` splits term
+    ``bounds[i]`` between shards i-1 and i.  When no term is hot, ranks
+    are all zero and ``bounds == plan_term_ranges(term_offsets, k)``
+    (callers then apply the legacy degenerate-cut repair unchanged).
+    With any split, global cut positions ``offs[bounds] + ranks`` are
+    repaired to be strictly increasing (no zero-nnz shards) whenever
+    ``nnz >= k``.
+    """
+    offs = np.asarray(term_offsets, dtype=np.int64)
+    if k < 1:
+        raise ValueError(f"need k >= 1 shards, got {k}")
+    v = len(offs) - 1
+    nnz = int(offs[-1])
+    counts = np.diff(offs)
+    ideal = -(-nnz // k) if nnz else 0
+    bounds = np.empty(k + 1, np.int64)
+    ranks = np.zeros(k + 1, np.int64)
+    bounds[0], bounds[k] = 0, v
+    for i, tgt in enumerate((np.arange(1, k, dtype=np.int64) * nnz) // k):
+        t = min(max(int(np.searchsorted(offs, tgt, side="right")) - 1, 0),
+                max(v - 1, 0))
+        if nnz and counts[t] > ideal and tgt > offs[t]:
+            bounds[i + 1] = t                         # mid-list: sub-shard
+            ranks[i + 1] = tgt - offs[t]
+        else:
+            bounds[i + 1] = min(
+                int(np.searchsorted(offs, tgt, side="left")), v)
+    if not ranks.any():
+        return np.maximum.accumulate(bounds).clip(0, v), ranks
+    # mixed plan: repair on global posting positions — strictly increasing
+    # cuts whenever the postings allow it, so no shard is minted empty
+    pos = offs[bounds] + ranks
+    pos = np.maximum.accumulate(pos)
+    if nnz >= k:
+        for i in range(1, k):
+            pos[i] = min(max(int(pos[i]), int(pos[i - 1]) + 1),
+                         nnz - (k - i))
+    for i in range(1, k):
+        t = int(np.searchsorted(offs, pos[i], side="right")) - 1
+        bounds[i], ranks[i] = t, pos[i] - offs[t]
+    return bounds, ranks
+
+
+def partition_index(index, k: int, *, mesh: Mesh = None,
+                    split_hot: bool = True):
     """Split a built SegmentInvertedIndex into a K-shard PartitionedIndex.
 
     COMPATIBILITY PATH over the streaming merger: the global CSR is viewed
@@ -255,13 +318,13 @@ def partition_index(index, k: int, *, mesh: Mesh = None):
     :func:`shard_partitioned_index` (shard axis on 'model', routing table
     and doc stats replicated).
 
-    Balance precondition: a single term's posting list cannot be split, so
-    the padded shard width is at least the longest list.  The ~1/K
-    per-device-bytes scaling therefore assumes max posting-list length <<
-    nnz/k (true once stopword-band terms are filtered by the vocabulary's
-    middle-band keep_frac); a Zipfian hot term that dominates nnz/k makes
-    every shard pad up to it — warned by the merger, sub-splitting hot
-    terms by doc range is the ROADMAP follow-up.
+    Balance: with ``split_hot=True`` (default) a Zipfian hot term whose
+    posting list exceeds the even split ``ceil(nnz/k)`` is sub-sharded by
+    doc range (``plan_posting_ranges``), so the padded shard width tracks
+    the even split and the ~1/K per-device-bytes claim holds even on
+    stopword-heavy vocabularies.  ``split_hot=False`` restores the old
+    term-aligned-only plan, where an unsplittable hot list makes every
+    shard pad up to it (warned by the merger).
     """
     from ..core.build_pipeline import PostingRun
     from .partition import partitioned_from_runs
@@ -275,7 +338,7 @@ def partition_index(index, k: int, *, mesh: Mesh = None):
         doc_len=np.asarray(index.doc_len),
         seg_len=np.asarray(index.seg_len), n_docs=index.n_docs,
         vocab_size=index.vocab_size, n_b=index.n_b,
-        functions=index.functions, mesh=mesh)
+        functions=index.functions, mesh=mesh, split_hot=split_hot)
 
 
 def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:
@@ -288,12 +351,17 @@ def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:
     rep = NamedSharding(mesh, P())
     shard0 = lambda a: NamedSharding(
         mesh, fit_spec(mesh, P("model"), (a.shape[0],)))
+    opt = lambda a, sh: None if a is None else sh
     return PartitionedIndex(
         term_offsets=shard0(pidx.term_offsets),
         doc_ids=shard0(pidx.doc_ids), values=shard0(pidx.values),
         term_to_shard=rep, range_lo=rep, idf=rep, doc_len=rep, seg_len=rep,
         n_docs=pidx.n_docs, vocab_size=pidx.vocab_size, n_b=pidx.n_b,
-        n_shards=pidx.n_shards, functions=pidx.functions)
+        n_shards=pidx.n_shards, functions=pidx.functions,
+        fences=None if pidx.fences is None else shard0(pidx.fences),
+        range_hi=opt(pidx.range_hi, rep),
+        split_term=opt(pidx.split_term, rep),
+        split_doc=opt(pidx.split_doc, rep))
 
 
 def shard_partitioned_index(pidx, mesh: Mesh):

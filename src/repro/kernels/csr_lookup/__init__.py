@@ -1,3 +1,5 @@
-from .ops import csr_lookup, csr_lookup_ref, lookup_pairs_ref, route_terms
+from .ops import (csr_lookup, csr_lookup_ref, lookup_pairs_ref,
+                  route_pairs, route_terms)
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref", "route_terms"]
+__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref",
+           "route_pairs", "route_terms"]

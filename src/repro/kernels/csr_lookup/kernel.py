@@ -9,30 +9,41 @@ grid cell:
 
   * the CSR offset gather  — per-term (shard, lo, hi) ride the SCALAR
     PREFETCH stream (PrefetchScalarGridSpec, the embed_bag pattern), so
-    block index maps pick the owning shard's posting row before the body
+    block index maps pick the owning shard's fence row before the body
     runs;
-  * the branchless bisect  — 32 steps over the owner's doc-id slice held
-    in VMEM (identical integer ops to ``core.index._bisect``, which keeps
-    the result bitwise-equal to ``csr_lookup_positions``);
+  * a TWO-LEVEL branchless bisect — level 1 runs over the shard's FENCE
+    row (every T-th doc id, VMEM-resident via the block index map) to
+    find the single T-wide posting tile that can hold the target, level
+    2 DMAs exactly that tile HBM->VMEM and bisects inside it.  VMEM per
+    cell is O(Nmax/T + T) instead of the old O(Nmax) whole-row map, so
+    shards scale to tens of millions of postings instead of the ~1-4M
+    the VMEM-resident row capped them at.  Both levels run the same
+    integer ops as ``core.index._bisect``, and the two-level split is
+    exact (the target position is unique), so results stay bitwise-equal
+    to ``csr_lookup_positions``;
   * the found-mask select  — the hit's values row is DMA'd from the HBM-
     resident ``values`` (the O(nnz) bulk never enters VMEM wholesale) and
     masked to zero for absent / OOV pairs;
-  * the cross-shard merge  — ownership is exclusive (term_to_shard is a
-    function), so the K-partial accumulator degenerates to one exclusive
+  * the cross-shard merge  — ownership is exclusive per (term, doc-range)
+    (term_to_shard plus the sub-shard split tables are a function of the
+    pair), so the K-partial accumulator degenerates to one exclusive
     write per (doc, term) output cell: no partials, no sum, no psum.
 
 grid = (Q, B): cell (i, j) resolves query term i against candidate j and
-writes the single (1, 1, n_b, n_f) output tile.  The doc-id row block is
-index-mapped by the prefetched shard id, and since j is the fastest grid
-dim, Pallas keeps it VMEM-resident across all B candidates of a term
-(and across consecutive terms routed to the same shard).
+writes the single (1, 1, n_b, n_f) output tile.  Routing comes in two
+ranks: per-term ``(Q,)`` streams (no hot-term sub-shards — the fence row
+block is index-mapped by ``s[i]`` and stays VMEM-resident across the
+B-fastest grid axis), or per-pair ``(Q, B)`` streams (doc-range
+sub-sharded indexes, where the owner is a function of the candidate doc
+too; the fence block index only changes when the owner does, so
+non-split terms still reuse the resident row).
 
-VMEM per cell: the owner's doc-id row (Nmax x 4 B — 4 MiB at 1M postings/
-shard; posting-slice tiling is the documented follow-up past that) + one
-(n_b, n_f) values row.  Scalar reads of ``dids_ref`` at dynamic offsets
-lower to strided VMEM loads; the values row fetch is a genuinely dynamic
-HBM->VMEM DMA (``make_async_copy`` on a ``pl.ANY`` ref, the only way to
-gather by a position computed in-kernel).
+VMEM per cell: the owner's fence row (ceil(Nmax/T) x 4 B) + one T-wide
+posting tile + one (n_b, n_f) values row.  The tile and values fetches
+are genuinely dynamic HBM->VMEM DMAs (``make_async_copy`` on
+``pltpu.ANY`` refs — the only way to gather by a position computed
+in-kernel); the fence reads at dynamic offsets lower to strided VMEM
+loads.
 """
 from __future__ import annotations
 
@@ -44,33 +55,78 @@ from jax.experimental.pallas import tpu as pltpu
 from .ref import bisect_steps
 
 
-def _make_kernel(n_iter: int):
-    def _kernel(shard_ref, lo_ref, hi_ref, docs_ref, dids_ref, vals_ref,
-                out_ref, buf, sem):
+def _make_kernel(tile: int, n_fence_iter: int, n_tile_iter: int,
+                 pair_routed: bool):
+    def _kernel(shard_ref, lo_ref, hi_ref, docs_ref, fence_ref, dids_ref,
+                vals_ref, out_ref, tile_buf, buf, sem_t, sem_v):
         i = pl.program_id(0)                 # query term
-        k = shard_ref[i]                     # owning shard (prefetched)
-        lo0, hi0 = lo_ref[i], hi_ref[i]      # posting range (prefetched)
+        if pair_routed:                      # owner depends on the doc too
+            j = pl.program_id(1)
+            k, lo0, hi0 = shard_ref[i, j], lo_ref[i, j], hi_ref[i, j]
+        else:
+            k, lo0, hi0 = shard_ref[i], lo_ref[i], hi_ref[i]
         d = docs_ref[0, 0]                   # candidate doc id
-        n = dids_ref.shape[1]
+        n_fence = fence_ref.shape[1]
 
-        # branchless bisect: first pos in [lo, hi) with doc_ids[pos] >= d
-        # — the same ops as core.index._bisect, on the owner's row only,
-        # and only the bit_length(Nmax) steps the shard width needs
-        def body(_, state):
+        # level 1 — fence bisect, clamped to the tiles intersecting
+        # [lo, hi): first fence index jf in (j_lo, j_hi] with
+        # fences[jf] >= d (j_hi + 1 when none).  Restricted to the range
+        # the fences are sorted (a posting range never crosses a list
+        # boundary), so for every tile strictly before jf the whole tile
+        # is < d and the answer lies in tile jf - 1 — or at its right
+        # boundary, fence jf itself.
+        j_lo = lo0 // tile
+        j_hi = jnp.maximum((hi0 - 1) // tile, j_lo)
+
+        def fence_body(_, state):
+            flo, fhi = state
+            mid = (flo + fhi) // 2
+            v = fence_ref[0, jnp.clip(mid, 0, n_fence - 1)]
+            go_right = (v < d) & (flo < fhi)
+            return (jnp.where(go_right, mid + 1, flo),
+                    jnp.where(go_right, fhi, mid))
+
+        jf, _ = jax.lax.fori_loop(0, n_fence_iter, fence_body,
+                                  (j_lo + 1, j_hi + 1))
+        # clamp keeps the tile DMA in bounds when lo == hi == n_fence*tile
+        # (empty range pinned at a tile-aligned shard end); the window
+        # below degenerates to empty there, so the clamp never changes a
+        # findable result
+        jt = jnp.clip(jf - 1, 0, n_fence - 1)
+        base = jt * tile
+
+        # DMA exactly the winning T-wide posting tile HBM -> VMEM
+        cp = pltpu.make_async_copy(
+            dids_ref.at[pl.ds(k, 1), pl.ds(base, tile)], tile_buf, sem_t)
+        cp.start()
+        cp.wait()
+
+        # level 2 — the in-tile bisect over the window [w_lo, w_hi):
+        # same ops as core.index._bisect, only bit_length(tile) steps
+        w_lo = jnp.maximum(base, lo0)
+        w_hi = jnp.minimum(base + tile, hi0)
+
+        def tile_body(_, state):
             lo, hi = state
             mid = (lo + hi) // 2
-            v = dids_ref[0, jnp.clip(mid, 0, n - 1)]
+            v = tile_buf[0, jnp.clip(mid - base, 0, tile - 1)]
             go_right = (v < d) & (lo < hi)
             return (jnp.where(go_right, mid + 1, lo),
                     jnp.where(go_right, hi, mid))
 
-        pos, _ = jax.lax.fori_loop(0, n_iter, body, (lo0, hi0))
-        p = jnp.clip(pos, 0, n - 1)
-        found = (pos < hi0) & (dids_ref[0, p] == d)
+        pos, _ = jax.lax.fori_loop(0, n_tile_iter, tile_body, (w_lo, w_hi))
+        # the hit value: inside the DMA'd tile, or — when the bisect ran
+        # off the window's right edge at a tile boundary still inside
+        # [lo, hi) — the next tile's first element, which IS fence jt+1
+        v_tile = tile_buf[0, jnp.clip(pos - base, 0, tile - 1)]
+        v_fence = fence_ref[0, jnp.clip(jt + 1, 0, n_fence - 1)]
+        v_at = jnp.where(pos < w_hi, v_tile, v_fence)
+        found = (pos < hi0) & (v_at == d)
 
         # fused found-mask select: DMA the hit's values row HBM -> VMEM
         # and mask — absent pairs emit exact zeros (the sigma=0 semantics)
-        dma = pltpu.make_async_copy(vals_ref.at[k, p], buf, sem)
+        p = jnp.clip(pos, 0, vals_ref.shape[1] - 1)
+        dma = pltpu.make_async_copy(vals_ref.at[k, p], buf, sem_v)
         dma.start()
         dma.wait()
         row = buf[...] * jnp.where(found, 1.0, 0.0).astype(jnp.float32)
@@ -81,33 +137,43 @@ def _make_kernel(n_iter: int):
 
 def csr_lookup_pallas(shard: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
                       doc_targets: jnp.ndarray, doc_ids: jnp.ndarray,
-                      values: jnp.ndarray, *,
-                      interpret: bool = False) -> jnp.ndarray:
-    """shard/lo/hi (Q,) int32 routed per term (ops.route_terms);
-    doc_targets (B,) int32; doc_ids (K, Nmax) int32;
-    values (K, Nmax, n_b, n_f) f32 -> M (B, Q, n_b, n_f) f32."""
+                      fences: jnp.ndarray, values: jnp.ndarray, *,
+                      tile: int, interpret: bool = False) -> jnp.ndarray:
+    """shard/lo/hi (Q,) int32 routed per term (ops.route_terms) or (Q, B)
+    routed per pair (ops.route_pairs, sub-sharded hot terms);
+    doc_targets (B,) int32; doc_ids (K, F*tile) int32 (tile-padded);
+    fences (K, F) int32; values (K, Nmax, n_b, n_f) f32
+    -> M (B, Q, n_b, n_f) f32."""
     Q = shard.shape[0]
     B = doc_targets.shape[0]
-    K, N = doc_ids.shape
+    n_fence = fences.shape[1]
     n_b, n_f = values.shape[2], values.shape[3]
+    pair_routed = shard.ndim == 2
+    fence_map = ((lambda i, j, s, lo, hi: (s[i, j], 0)) if pair_routed
+                 else (lambda i, j, s, lo, hi: (s[i], 0)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,              # shard, lo, hi
         grid=(Q, B),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, s, lo, hi: (0, j)),
-            pl.BlockSpec((1, N), lambda i, j, s, lo, hi: (s[i], 0)),
+            pl.BlockSpec((1, n_fence), fence_map),     # owner's fence row
+            pl.BlockSpec(memory_space=pltpu.ANY),      # doc_ids stay in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),      # values stay in HBM
         ],
         out_specs=pl.BlockSpec((1, 1, n_b, n_f),
                                lambda i, j, s, lo, hi: (j, i, 0, 0)),
         scratch_shapes=[
+            pltpu.VMEM((1, tile), jnp.int32),
             pltpu.VMEM((n_b, n_f), jnp.float32),
+            pltpu.SemaphoreType.DMA(()),
             pltpu.SemaphoreType.DMA(()),
         ],
     )
     return pl.pallas_call(
-        _make_kernel(bisect_steps(N)),
+        _make_kernel(tile, bisect_steps(n_fence), bisect_steps(tile),
+                     pair_routed),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Q, n_b, n_f), jnp.float32),
         interpret=interpret,
-    )(shard, lo, hi, doc_targets[None].astype(jnp.int32), doc_ids, values)
+    )(shard, lo, hi, doc_targets[None].astype(jnp.int32), fences, doc_ids,
+      values)

@@ -9,6 +9,15 @@ of the Pallas interpreter, which emulates the grid cell-by-cell and is a
 correctness tool, not a fast path.  ``interpret=True`` forces the
 interpreter (the oracle-parity sweep in tests/test_kernels.py);
 ``interpret=False`` forces the compiled TPU kernel.
+
+The kernel path runs the two-level tiled bisect: ``fences`` (every
+``tile``-th doc id, built at index-build time by
+``core.index.build_fences``) are bisected in VMEM first, then only the
+winning ``tile``-wide posting slice is DMA'd HBM->VMEM.  ``doc_ids`` is
+padded here to a whole number of tiles so the slice DMA is always in
+bounds; fences are rebuilt on the fly whenever the provided array does
+not match the requested ``tile`` (e.g. the parity sweep overriding the
+build-time default).
 """
 from __future__ import annotations
 
@@ -16,16 +25,22 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import csr_lookup_pallas
-from .ref import csr_lookup_ref, lookup_pairs_ref, route_terms
+from .ref import (csr_lookup_ref, lookup_pairs_ref, route_pairs,
+                  route_terms)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("tile", "interpret"))
 def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                values: jnp.ndarray, term_to_shard, range_lo,
                query_terms: jnp.ndarray, doc_targets: jnp.ndarray,
-               *, interpret: bool | None = None) -> jnp.ndarray:
+               *, fences: jnp.ndarray | None = None,
+               split_term: jnp.ndarray | None = None,
+               split_doc: jnp.ndarray | None = None,
+               tile: int | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
     """Fused lookup–merge: query_terms (Q,) x doc_targets (B,) over a
     K-stacked shard CSR -> M_{q,d} (B, Q, n_b, n_f); zeros for absent
     pairs, OOV / past-vocab terms and out-of-range doc ids.
@@ -33,17 +48,42 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     ``term_offsets (K, Vmax+1)`` / ``doc_ids (K, Nmax)`` /
     ``values (K, Nmax, n_b, n_f)`` are the PartitionedIndex layout; the
     single-CSR case is ``K == 1`` with ``term_to_shard=None`` (terms
-    route to shard 0 at their own row).
+    route to shard 0 at their own row).  ``split_term``/``split_doc``
+    are the doc-range sub-shard tables of hot-term-split indexes (the
+    owner then depends on the candidate doc, so routing is per pair);
+    ``fences``/``tile`` configure the kernel's two-level bisect.
     """
+    from ...core.index import POSTING_TILE, build_fences, fence_count
+
     if interpret is None and jax.default_backend() != "tpu":
         return csr_lookup_ref(term_offsets, doc_ids, values, term_to_shard,
-                              range_lo, query_terms, doc_targets)
-    k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
-                            range_lo)
+                              range_lo, query_terms, doc_targets,
+                              split_term, split_doc)
+    t = int(tile or POSTING_TILE)
+    if split_term is None:
+        k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
+                                range_lo)
+    else:
+        shape = (query_terms.shape[0], doc_targets.shape[0])     # (Q, B)
+        k, lo, hi = route_pairs(
+            jnp.broadcast_to(query_terms[:, None], shape),
+            jnp.broadcast_to(doc_targets[None], shape),
+            term_offsets, term_to_shard, range_lo, split_term, split_doc)
+    n = doc_ids.shape[1]
+    n_fence = fence_count(n, t)
+    pad = n_fence * t - n
+    if pad:
+        doc_ids = jnp.pad(doc_ids, ((0, 0), (0, pad)),
+                          constant_values=np.iinfo(np.int32).max)
+    # stored fences are spaced at the build-time POSTING_TILE — rebuild
+    # whenever the requested tile disagrees (the parity sweep's override)
+    if fences is None or t != POSTING_TILE or fences.shape[1] != n_fence:
+        fences = build_fences(doc_ids, t)    # already tile-padded: exact
     return csr_lookup_pallas(
         k.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32),
-        doc_targets.astype(jnp.int32), doc_ids,
-        values.astype(jnp.float32), interpret=bool(interpret))
+        doc_targets.astype(jnp.int32), doc_ids, fences,
+        values.astype(jnp.float32), tile=t, interpret=bool(interpret))
 
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref", "route_terms"]
+__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref",
+           "route_pairs", "route_terms"]

@@ -27,6 +27,17 @@ terms).  Envelope: the flattened view needs ``K * Nmax < 2^31`` (int32
 positions) — the same per-host wall the single-CSR skeleton has; the
 Pallas kernel (the TPU path) indexes shards natively and does not
 inherit it.
+
+Doc-range sub-sharding (hot Zipfian terms split across shards by doc-id
+range — ``dist.sharding.plan_posting_ranges``) generalises the routing:
+ownership is exclusive per (term, doc-range) instead of per term, so the
+owner becomes a function of the PAIR.  :func:`route_pairs` resolves it
+from two tiny (K,) replicated tables — ``split_term`` (the term that
+continues into shard k from k-1) and ``split_doc`` (the first doc id
+shard k owns of it): ``owner = first_owner + #{k : split_term[k] == w
+and split_doc[k] <= d}``.  Everything downstream (the flat-space bisect,
+the found mask) is unchanged, and absent-pair zeros keep the exclusive-
+write merge exact.
 """
 from __future__ import annotations
 
@@ -72,17 +83,62 @@ def route_terms(term_ids: jnp.ndarray, term_offsets: jnp.ndarray,
     return k, lo, hi
 
 
+def route_pairs(term_ids: jnp.ndarray, doc_targets: jnp.ndarray,
+                term_offsets: jnp.ndarray, term_to_shard, range_lo,
+                split_term: jnp.ndarray, split_doc: jnp.ndarray):
+    """Per-PAIR routing for doc-range sub-sharded indexes.
+
+    term_ids and doc_targets must be broadcast to a common shape by the
+    caller (one entry per (term, doc) pair); returns ``(k, lo, hi)`` in
+    that shape.  ``term_to_shard`` maps a term to its FIRST owning shard;
+    the (K,) ``split_term``/``split_doc`` tables advance ownership one
+    shard per split boundary at or below ``d`` — sub-shards of a term are
+    consecutive and their doc ranges are disjoint and ascending, so the
+    count IS the owner offset.  Terms with no splits take offset 0 and
+    reduce to :func:`route_terms` exactly.
+    """
+    vmax = term_offsets.shape[1] - 1
+    w = term_ids.clip(0)
+    k0 = term_to_shard.at[w].get(mode="clip").astype(jnp.int32)
+    hop = ((split_term == w[..., None])
+           & (split_doc <= doc_targets[..., None])).sum(-1).astype(jnp.int32)
+    k = k0 + hop
+    row = (w - range_lo.at[k].get(mode="clip")).clip(0, vmax)
+    lo = term_offsets.at[k, row].get(mode="clip")
+    hi = term_offsets.at[k, (row + 1).clip(0, vmax)].get(mode="clip")
+    hi = jnp.where(term_ids >= 0, hi, lo)      # negatives: empty range
+    return k, lo, hi
+
+
+def _route(term_ids, doc_targets, term_offsets, term_to_shard, range_lo,
+           split_term, split_doc):
+    """Dispatch: per-term routing + broadcast when no sub-shards exist,
+    per-pair routing when they do.  Shapes out are always pair-shaped."""
+    if split_term is None:
+        k, lo, hi = route_terms(term_ids, term_offsets, term_to_shard,
+                                range_lo)
+        shape = jnp.broadcast_shapes(term_ids.shape, doc_targets.shape)
+        return (jnp.broadcast_to(k, shape), jnp.broadcast_to(lo, shape),
+                jnp.broadcast_to(hi, shape))
+    shape = jnp.broadcast_shapes(term_ids.shape, doc_targets.shape)
+    return route_pairs(jnp.broadcast_to(term_ids, shape),
+                       jnp.broadcast_to(doc_targets, shape),
+                       term_offsets, term_to_shard, range_lo,
+                       split_term, split_doc)
+
+
 def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                      values: jnp.ndarray, term_to_shard, range_lo,
-                     term_ids: jnp.ndarray, doc_targets: jnp.ndarray
-                     ) -> jnp.ndarray:
+                     term_ids: jnp.ndarray, doc_targets: jnp.ndarray,
+                     split_term=None, split_doc=None) -> jnp.ndarray:
     """Generic-batch routed lookup: term_ids (..., Q) x doc_targets
     broadcastable (...,) -> (..., Q, n_b, n_f), zeros for absent pairs."""
     from ...core.index import _bisect
 
     K, N = doc_ids.shape
-    k, lo, hi = route_terms(term_ids, term_offsets, term_to_shard, range_lo)
     d = jnp.broadcast_to(doc_targets[..., None], term_ids.shape)
+    k, lo, hi = _route(term_ids, d, term_offsets, term_to_shard, range_lo,
+                       split_term, split_doc)
     base = k * N
     flat = doc_ids.reshape(K * N)
     pos = _bisect(flat, base + lo, base + hi, d, n_iter=bisect_steps(N))
@@ -93,25 +149,27 @@ def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
 
 def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                    values: jnp.ndarray, term_to_shard, range_lo,
-                   query_terms: jnp.ndarray, doc_targets: jnp.ndarray
-                   ) -> jnp.ndarray:
+                   query_terms: jnp.ndarray, doc_targets: jnp.ndarray,
+                   split_term=None, split_doc=None) -> jnp.ndarray:
     """The serving cartesian: query_terms (Q,) x doc_targets (B,) ->
     M_{q,d} (B, Q, n_b, n_f).
 
-    Routing runs once on the (Q,) terms and broadcasts over candidates —
-    cheaper than the single-CSR path's per-(B, Q) offset gathers — which
-    is also exactly the dataflow of the Pallas kernel (scalar-prefetched
-    per-term routing, doc-tiled grid).
+    Without sub-shards, routing runs once on the (Q,) terms and
+    broadcasts over candidates — cheaper than the single-CSR path's
+    per-(B, Q) offset gathers — which is also exactly the dataflow of
+    the Pallas kernel (scalar-prefetched per-term routing, doc-tiled
+    grid).  With sub-shards the owner depends on the candidate, so
+    routing is per (B, Q) pair (still one bisect per pair).
     """
     from ...core.index import _bisect
 
     K, N = doc_ids.shape
-    k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
-                            range_lo)                       # (Q,)
     shape = (doc_targets.shape[0], query_terms.shape[0])    # (B, Q)
     d = jnp.broadcast_to(doc_targets[:, None], shape)
-    lo_f = jnp.broadcast_to((k * N + lo)[None], shape)
-    hi_f = jnp.broadcast_to((k * N + hi)[None], shape)
+    k, lo, hi = _route(query_terms[None], d, term_offsets, term_to_shard,
+                       range_lo, split_term, split_doc)
+    lo_f = k * N + lo
+    hi_f = k * N + hi
     flat = doc_ids.reshape(K * N)
     pos = _bisect(flat, lo_f, hi_f, d, n_iter=bisect_steps(N))
     in_list = (pos < hi_f) & (flat.at[pos].get(mode="clip") == d)

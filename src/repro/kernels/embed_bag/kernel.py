@@ -16,7 +16,6 @@ is removing the (nnz, D) HBM materialisation (2x traffic on the hot path).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

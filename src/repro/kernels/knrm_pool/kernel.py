@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ...retrievers.knrm import MUS, SIGMAS
+from ...retrievers.knrm import MUS
 
 
 def _kernel(cos_ref, mask_ref, out_ref):

@@ -15,7 +15,6 @@ MXU alignment: bv, Ls multiples of 128; De padded to 128 by ops.py.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

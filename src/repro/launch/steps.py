@@ -8,9 +8,7 @@ batches are ShapeDtypeStructs (the shannon/kernels pattern), so lowering a
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -263,7 +261,7 @@ def _lm_decode_cell(cfg: TransformerConfig, shape: ShapeConfig, mesh: Mesh
     x_s = SDS((B, 1, cfg.d_model), dt)
 
     def decode_layer(lp, kc, vc, x):
-        from ..models.layers import apply_rope, gqa_attention, rms_norm
+        from ..models.layers import gqa_attention, rms_norm
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
         Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
         q = jnp.einsum("bsd,dk->bsk", h, lp["wq"]).reshape(B, 1, Hq, hd)

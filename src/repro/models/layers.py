@@ -6,7 +6,6 @@ init functions take explicit PRNG keys, forward functions are pure.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

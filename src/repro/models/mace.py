@@ -13,7 +13,7 @@ message-passing primitive (no sparse formats needed).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ recommenders share a small transformer encoder built on layers.gqa_attention.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ Functional implementation designed for pjit/SPMD at pod scale:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

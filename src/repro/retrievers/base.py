@@ -10,7 +10,6 @@ QMeta carries per-query/per-doc side info every scorer may need.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Sequence, Tuple
 

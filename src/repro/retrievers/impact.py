@@ -19,7 +19,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import dense_init
 from .base import QMeta, RetrieverSpec, fidx, register
 
 

@@ -10,7 +10,6 @@ implementation is its oracle.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from ..models.layers import dense_init

@@ -12,7 +12,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,16 +58,22 @@ class SeineEngine:
     only mesh placement is applied.
 
     Lookup dispatch: without a mesh the engine scores over the FUSED
-    lookup path (``kernels.csr_lookup`` — one routed bisect per
-    (term, doc) pair, no K partial matrices); with a mesh it keeps the
-    partial-sum jnp expression the XLA partitioner turns into an
-    all-reduce.  Both are held bitwise-equal to the single-CSR oracle.
+    lookup path (``kernels.csr_lookup`` — one routed two-level bisect per
+    (term, doc) pair, no K partial matrices; on TPU only the winning
+    posting tile is DMA'd into VMEM, so shard size is not VMEM-bound);
+    with a mesh it keeps the partial-sum jnp expression the XLA
+    partitioner turns into an all-reduce.  Both are held bitwise-equal
+    to the single-CSR oracle.  ``lookup_tile`` overrides the kernel's
+    posting-tile width (default ``core.index.POSTING_TILE``) — a serving
+    knob for tuning VMEM footprint vs DMA count per cell; every width is
+    bitwise-exact.
     """
 
     def __init__(self, index: PairLookupIndex, retriever: str,
                  params: Any, *, mesh: Optional[Any] = None,
                  partition: Optional[str] = None,
-                 n_shards: Optional[int] = None):
+                 n_shards: Optional[int] = None,
+                 lookup_tile: Optional[int] = None):
         if partition not in (None, "term"):
             raise ValueError(f"unknown partition scheme {partition!r}; "
                              "supported: 'term'")
@@ -106,11 +112,13 @@ class SeineEngine:
         # NamedShardings, so keep the XLA-partitionable jnp expression
         # (partial-sum merge -> all-reduce over the model axis)
         self._lookup_impl = "jnp" if mesh is not None else "fused"
+        self._lookup_tile = lookup_tile
         self._score = jax.jit(self._score_impl)
 
     def _score_impl(self, params, query_terms, doc_ids):
         m = self.index.qd_matrix(query_terms, doc_ids,
-                                 impl=self._lookup_impl)
+                                 impl=self._lookup_impl,
+                                 tile=self._lookup_tile)
         meta = make_qmeta(self.index, query_terms, doc_ids)
         return self.spec.score(params, m, meta, self.index.functions)
 

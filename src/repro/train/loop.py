@@ -8,13 +8,13 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
-from ..dist.compression import compress_with_feedback, init_error_feedback
+from ..dist.compression import compress_with_feedback
 from ..dist.fault import PreemptionGuard, StragglerMonitor
 from .optimizer import Optimizer, apply_updates, clip_by_global_norm
 

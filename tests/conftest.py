@@ -1,7 +1,5 @@
 """Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
 benches must see 1 device (dryrun.py sets its own flags)."""
-import jax
-import numpy as np
 import pytest
 
 
@@ -28,3 +26,12 @@ def seine_world():
     return dict(cfg=cfg, ds=ds, vocab=vocab, toks=toks, segs=segs,
                 provider=provider, builder=builder, index=index,
                 queries=queries)
+
+
+@pytest.fixture(scope="session")
+def hot_term_index():
+    """One hot stopword term dominating nnz/K — the doc-range sub-shard
+    trigger corpus shared by the partition and kernel parity sweeps
+    (same generator the CI bytes gate benches at larger scale)."""
+    from repro.data.synth_corpus import build_zipfian_index
+    return build_zipfian_index()

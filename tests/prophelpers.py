@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 import itertools
-from typing import Callable, Iterable
+from typing import Callable
 
 import numpy as np
 

@@ -18,9 +18,8 @@ import numpy as np
 import pytest
 
 from repro.ckpt import load_index, load_index_shard, save_index
-from repro.core import (BuildPipeline, IndexBuilder,
-                        compute_doc_seg_lengths, make_unique_terms_fn,
-                        unique_terms_host)
+from repro.core import (BuildPipeline, compute_doc_seg_lengths,
+                        make_unique_terms_fn, unique_terms_host)
 from repro.core.index import SegmentInvertedIndex, build_from_rows
 from repro.dist.partition import (PartitionedIndex, merged_term_counts,
                                   partitioned_from_runs)

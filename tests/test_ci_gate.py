@@ -1,0 +1,222 @@
+"""Unit tests for the CI plumbing itself.
+
+scripts/bench_gate.py is what keeps the repo's perf claims honest, so its
+comparison logic is tested against synthetic baseline/current JSON pairs
+(pass, regression, missing-metric, direction handling) without running
+any benchmark; the minilint fallback gets a smoke test so the lint lane
+cannot silently rot in ruff-less containers.
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name):
+    path = os.path.join(REPO_ROOT, "scripts", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def gate():
+    return _load("bench_gate")
+
+
+class TestClassify:
+    def test_latency_and_size_metrics_are_lower_better(self, gate):
+        for path in ("paths.term_k2.lookup_us.fused", "score_us",
+                     "paths.replicated.bytes_per_device", "build_s",
+                     "streaming_peak_host_bytes"):
+            assert gate.classify(path) == "lower", path
+
+    def test_throughput_metrics_are_higher_better(self, gate):
+        for path in ("docs_per_s_streaming",
+                     "paths.term_k4.bytes_shrink_vs_replicated",
+                     "throughput_ratio_streaming_vs_legacy"):
+            assert gate.classify(path) == "higher", path
+
+    def test_counts_and_configs_are_ignored(self, gate):
+        for path in ("nnz", "vocab", "candidates", "timing.reps",
+                     "paths.term_k2.sub_sharded"):
+            assert gate.classify(path) is None, path
+
+
+class TestCompare:
+    BASE = {
+        "nnz": 1000,                                   # not gated
+        "paths": {
+            "replicated": {"lookup_us": {"fused": 100.0, "jnp": 200.0}},
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 2.0},
+        },
+    }
+
+    def test_identical_passes(self, gate):
+        rows, ok = gate.compare(self.BASE, self.BASE, threshold=1.3)
+        assert ok
+        assert all(r["status"] == "ok" for r in rows)
+        # every gated leaf is covered, the count is not
+        metrics = {r["metric"] for r in rows}
+        assert "paths.replicated.lookup_us.fused" in metrics
+        assert "paths.term_k2.bytes_shrink_vs_replicated" in metrics
+        assert "nnz" not in metrics
+
+    def test_slowdown_within_threshold_passes(self, gate):
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 120.0, "jnp": 200.0}},
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 2.0}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert ok, rows
+
+    def test_uniform_machine_slowdown_is_not_a_regression(self, gate):
+        """A loaded runner slows EVERY timing metric together; the
+        median-normalized gate must not read that as a code regression
+        (deterministic byte/shrink metrics are untouched by load)."""
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 150.0, "jnp": 300.0}},
+            "term_k2": {"lookup_us": {"fused": 135.0},
+                        "bytes_shrink_vs_replicated": 2.0}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert ok, rows
+        assert any(r["status"] == "jitter-ok" for r in rows)
+
+    def test_single_path_regression_on_loaded_runner_still_fails(self, gate):
+        """Load 1.5x everywhere PLUS a 1.5x code regression on one path:
+        the normalized ratio isolates the code part and trips."""
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 150.0, "jnp": 300.0}},
+            "term_k2": {"lookup_us": {"fused": 202.5},   # 90 * 1.5 * 1.5
+                        "bytes_shrink_vs_replicated": 2.0}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert not ok
+        bad = [r for r in rows if r["status"] == "regressed"]
+        assert [r["metric"] for r in bad] == \
+            ["paths.term_k2.lookup_us.fused"]
+
+    def test_latency_regression_fails(self, gate):
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 140.0, "jnp": 200.0}},
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 2.0}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert not ok
+        bad = [r for r in rows if r["status"] == "regressed"]
+        assert [r["metric"] for r in bad] == \
+            ["paths.replicated.lookup_us.fused"]
+        assert bad[0]["ratio"] == pytest.approx(1.4)
+
+    def test_throughput_shrink_fails(self, gate):
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 100.0, "jnp": 200.0}},
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 1.2}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert not ok
+        bad = [r for r in rows if r["status"] == "regressed"]
+        assert [r["metric"] for r in bad] == \
+            ["paths.term_k2.bytes_shrink_vs_replicated"]
+
+    def test_missing_metric_fails(self, gate):
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 100.0}},  # jnp gone
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 2.0}}}
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert not ok
+        missing = [r for r in rows if r["status"] == "missing"]
+        assert [r["metric"] for r in missing] == \
+            ["paths.replicated.lookup_us.jnp"]
+        assert missing[0]["current"] is None
+
+    def test_new_metrics_in_current_are_free(self, gate):
+        cur = {"paths": {
+            "replicated": {"lookup_us": {"fused": 100.0, "jnp": 200.0}},
+            "term_k2": {"lookup_us": {"fused": 90.0},
+                        "bytes_shrink_vs_replicated": 2.0},
+            "zipf_term_k4": {"lookup_us": 5000.0}}}      # new, unbaselined
+        rows, ok = gate.compare(self.BASE, cur, threshold=1.3)
+        assert ok
+        assert not any(r["metric"].startswith("paths.zipf") for r in rows)
+
+
+class TestGateCli:
+    """End-to-end exit-code contract of the gate script."""
+
+    def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3"):
+        import json
+        import shutil
+        root = tmp_path / "repo"
+        (root / "scripts").mkdir(parents=True)
+        shutil.copy(os.path.join(REPO_ROOT, "scripts", "bench_gate.py"),
+                    root / "scripts" / "bench_gate.py")
+        if serve is not None:
+            (root / "BENCH_serve.json").write_text(json.dumps(serve))
+        args = [sys.executable, "scripts/bench_gate.py",
+                "--threshold", threshold]
+        if baseline is not None:
+            bdir = tmp_path / "baseline"
+            bdir.mkdir(exist_ok=True)
+            for name, tree in baseline.items():
+                (bdir / name).write_text(json.dumps(tree))
+            args += ["--baseline-dir", str(bdir)]
+        return subprocess.run(args, cwd=root, capture_output=True,
+                              text=True)
+
+    GOOD_SERVE = {
+        "gate": {"metric": "m", "fused_k2_lookup_us": 90.0,
+                 "replicated_jnp_lookup_us": 100.0, "pass": True},
+        "zipf_bytes_gate": {
+            "metric": "z", "pass": True,
+            "per_k": {"2": {"shrink": 1.9, "floor": 1.6, "pass": True}}},
+        "paths": {"term_k2": {"lookup_us": {"fused": 90.0}}},
+    }
+
+    def test_missing_file_is_distinct_exit_code(self, gate, tmp_path):
+        r = self._run(tmp_path, serve=None)
+        assert r.returncode == gate.EXIT_MISSING
+        assert "missing" in r.stdout
+
+    def test_pass_runs_from_any_cwd(self, gate, tmp_path):
+        """Paths resolve against the repo root, not the cwd."""
+        r = self._run(tmp_path, serve=self.GOOD_SERVE)
+        assert r.returncode == gate.EXIT_PASS, r.stdout
+
+    def test_absolute_gate_failure_exits_one(self, gate, tmp_path):
+        serve = dict(self.GOOD_SERVE)
+        serve["gate"] = dict(serve["gate"], **{"pass": False})
+        r = self._run(tmp_path, serve=serve)
+        assert r.returncode == gate.EXIT_FAIL
+
+    def test_baseline_regression_exits_one(self, gate, tmp_path):
+        baseline = {"BENCH_serve.json": {
+            "paths": {"term_k2": {"lookup_us": {"fused": 50.0}}}}}
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, baseline=baseline)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "regressed" in r.stdout
+
+
+class TestMinilint:
+    def test_clean_tree_and_dirty_file(self, tmp_path):
+        lint = _load("minilint")
+        good = tmp_path / "good.py"
+        good.write_text("import os\n\nprint(os.sep)\n")
+        assert lint.lint_file(str(good)) == []
+        bad = tmp_path / "bad.py"
+        bad.write_text("import os\nimport sys\n\nprint(os.sep)  \n")
+        found = lint.lint_file(str(bad))
+        assert any("F401" in f and "sys" in f for f in found)
+        assert any("W291" in f for f in found)
+
+    def test_noqa_suppresses(self, tmp_path):
+        lint = _load("minilint")
+        f = tmp_path / "x.py"
+        f.write_text("import sys  # noqa: F401\n")
+        assert lint.lint_file(str(f)) == []

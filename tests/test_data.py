@@ -1,6 +1,5 @@
 """Data pipeline: tokenizer, synthetic corpus, samplers, metrics."""
 import numpy as np
-import pytest
 
 from repro.data.metrics import (average_precision, evaluate_ranking,
                                 ndcg_at_k, precision_at_k)

@@ -10,11 +10,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ALL_ARCH_IDS, get_bundle, smoke
-from repro.dist.sharding import (data_axes, fit_spec, gnn_param_rules,
-                                 index_shardings, lm_cache_spec,
-                                 lm_param_rules, lm_param_rules_fsdp,
-                                 opt_state_shardings, recsys_param_rules,
-                                 shard_index, tree_shardings)
+from repro.dist.sharding import (fit_spec, gnn_param_rules, index_shardings,
+                                 lm_cache_spec, lm_param_rules,
+                                 lm_param_rules_fsdp, opt_state_shardings,
+                                 recsys_param_rules, shard_index,
+                                 tree_shardings)
 from repro.launch.mesh import make_host_mesh
 from repro.train.optimizer import adam
 

@@ -7,7 +7,7 @@ import pytest
 
 from repro.data.metrics import evaluate_ranking, mean_metrics
 from repro.retrievers import all_retrievers, get_retriever
-from repro.serving import SeineEngine, make_qmeta
+from repro.serving import SeineEngine
 
 
 def test_nine_retrievers_registered():
@@ -53,8 +53,7 @@ class TestSPDecode:
     def test_stats_combine_matches_dense(self):
         """Sharded online-softmax combination == dense attention (oracle),
         simulated by splitting KV into chunks and combining by hand."""
-        from repro.dist.sp_decode import (combine_decode_stats,
-                                          local_decode_stats)
+        from repro.dist.sp_decode import local_decode_stats
         from repro.models.layers import naive_attention
 
         B, S, Hq, Hkv, hd, n_shards = 2, 64, 4, 2, 16, 4

@@ -83,11 +83,15 @@ class TestCsrLookup:
     The single-CSR legacy path (``csr_lookup_positions`` via
     ``qd_matrix(impl="jnp")``) is the oracle; every csr_lookup lowering —
     the routed-jnp CPU path AND the Pallas kernel in interpret mode —
-    must reproduce it exactly (rtol=0/atol=0) across K in {1, 2, 4},
+    must reproduce it exactly (rtol=0/atol=0) across K in {1, 2, 4} and
+    posting-tile widths {64, 256, 1024} (the kernel's two-level bisect),
     including OOV (-1) terms, past-vocab terms, absent pairs,
-    out-of-range / negative doc ids, and padded-tail candidate sets.
+    out-of-range / negative doc ids, padded-tail candidate sets, and a
+    Zipfian hot-term corpus whose dominant posting list is doc-range
+    sub-sharded (per-pair routing).
     """
     K_SWEEP = (1, 2, 4)
+    TILE_SWEEP = (64, 256, 1024)
     RETRIEVERS = ("knrm", "deeptilebars", "hint", "deepimpact")
 
     def _adversarial(self, w, seed, n_docs_tail=3):
@@ -145,6 +149,74 @@ class TestCsrLookup:
                 np.testing.assert_array_equal(
                     np.asarray(p.qd_matrix(q, docs, impl="interpret")),
                     oracle, err_msg=f"K={k} seed={seed} pallas-interpret")
+
+    @pytest.mark.parametrize("tile", (64, 256, 1024))
+    def test_tiled_kernel_bitwise_across_tile_widths(self, seine_world,
+                                                     tile):
+        """The two-level bisect is exact at EVERY tile width: the fence
+        bisect plus the single DMA'd tile must reproduce the oracle for
+        single-CSR and every K — tiles smaller, equal to and larger than
+        the shard's posting span all take the same answer path."""
+        from repro.dist.sharding import partition_index
+        idx = seine_world["index"]
+        q, docs = self._adversarial(seine_world, seed=0)
+        oracle = np.asarray(idx.qd_matrix(q, docs, impl="jnp"))
+        np.testing.assert_array_equal(
+            np.asarray(idx.qd_matrix(q, docs, impl="interpret", tile=tile)),
+            oracle, err_msg=f"single-CSR tile={tile}")
+        for k in self.K_SWEEP:
+            p = partition_index(idx, k)
+            np.testing.assert_array_equal(
+                np.asarray(p.qd_matrix(q, docs, impl="interpret",
+                                       tile=tile)),
+                oracle, err_msg=f"K={k} tile={tile}")
+
+    def test_sub_sharded_hot_term_bitwise(self, hot_term_index):
+        """Doc-range sub-sharding routes per PAIR (the owner depends on
+        the candidate doc): both the routed-jnp lowering and the
+        pair-routed interpret kernel must reproduce the single-CSR
+        oracle across tile widths, including doc ids that straddle the
+        sub-shard split boundaries."""
+        from repro.dist.sharding import partition_index
+        idx = hot_term_index
+        p = partition_index(idx, 8)
+        assert p.split_term is not None, "corpus must trigger sub-sharding"
+        splits = np.asarray(p.split_doc)[np.asarray(p.split_term) >= 0]
+        q = jnp.asarray(np.array([0, 1, 17, -1, idx.vocab_size + 3, 39],
+                                 np.int32))
+        docs = jnp.asarray(np.concatenate([
+            splits, splits - 1,                  # straddle every boundary
+            [0, idx.n_docs - 1, idx.n_docs, -3]]).astype(np.int32))
+        oracle = np.asarray(idx.qd_matrix(q, docs, impl="jnp"))
+        np.testing.assert_array_equal(
+            np.asarray(p.qd_matrix(q, docs)), oracle, err_msg="fused-ref")
+        for tile in self.TILE_SWEEP:
+            np.testing.assert_array_equal(
+                np.asarray(p.qd_matrix(q, docs, impl="interpret",
+                                       tile=tile)),
+                oracle, err_msg=f"pallas-interpret tile={tile}")
+
+    def test_engine_sub_sharded_scores_all_retrievers(self, hot_term_index):
+        """Engine-level: fused serving over a sub-sharded index — with a
+        non-default lookup_tile — reproduces the single-CSR scores for
+        every indexed retriever."""
+        from repro.dist.sharding import partition_index
+        from repro.retrievers import get_retriever
+        from repro.serving import SeineEngine
+        idx = hot_term_index
+        docs = jnp.arange(16)
+        q = jnp.asarray(np.array([0, 1, 5, 17, 23, -1], np.int32))
+        for retriever in self.RETRIEVERS:
+            spec = get_retriever(retriever)
+            params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+            oracle = SeineEngine(idx, retriever, params)
+            oracle._lookup_impl = "jnp"
+            ref = np.asarray(oracle.score(q, docs))
+            eng = SeineEngine(partition_index(idx, 8), retriever, params,
+                              lookup_tile=64)
+            np.testing.assert_allclose(
+                np.asarray(eng.score(q, docs)), ref, rtol=0, atol=0,
+                err_msg=f"{retriever} sub-sharded")
 
     def test_raw_op_matches_lookup_positions(self, seine_world):
         """The op against csr_lookup_positions directly (not through

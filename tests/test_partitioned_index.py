@@ -17,9 +17,8 @@ import pytest
 
 from prophelpers import sweep
 from repro.core.index import PairLookupIndex
-from repro.dist.partition import PartitionedIndex
 from repro.dist.sharding import (partition_index, partitioned_index_shardings,
-                                 plan_term_ranges)
+                                 plan_posting_ranges, plan_term_ranges)
 from repro.launch.mesh import make_host_mesh
 from repro.retrievers import get_retriever
 from repro.serving import SeineEngine, ServeStats, serve_batches
@@ -86,6 +85,130 @@ class TestPlanTermRanges:
         assert bounds[-1] == 3
 
 
+class TestPlanPostingRanges:
+    def test_no_hot_terms_matches_term_plan(self, seine_world):
+        """Without a list exceeding the even split, the posting planner
+        must reproduce plan_term_ranges exactly (zero ranks) — the legacy
+        plan, repair and shard layout stay bit-identical."""
+        offs = np.asarray(seine_world["index"].term_offsets, np.int64)
+        for k in (1, 2, 4):
+            bounds, ranks = plan_posting_ranges(offs, k)
+            assert not ranks.any()
+            np.testing.assert_array_equal(bounds, plan_term_ranges(offs, k))
+
+    def test_hot_term_cut_mid_list(self, hot_term_index):
+        """A dominating list takes mid-list cuts at the exact quantile
+        targets; resulting posting ranges are balanced to ceil(nnz/k)."""
+        offs = np.asarray(hot_term_index.term_offsets, np.int64)
+        k = 8
+        bounds, ranks = plan_posting_ranges(offs, k)
+        assert ranks.any(), "hot corpus must produce mid-list cuts"
+        pos = offs[bounds] + ranks
+        assert pos[0] == 0 and pos[-1] == offs[-1]
+        assert (np.diff(pos) > 0).all(), "no zero-nnz shards"
+        assert int(np.diff(pos).max()) <= -(-int(offs[-1]) // k) + 1
+
+    def test_rejects_bad_k(self, hot_term_index):
+        with pytest.raises(ValueError):
+            plan_posting_ranges(
+                np.asarray(hot_term_index.term_offsets, np.int64), 0)
+
+
+class TestDocRangeSubShards:
+    """Structural invariants of a sub-sharded PartitionedIndex."""
+
+    def test_split_tables_consistent(self, hot_term_index):
+        idx = hot_term_index
+        p = partition_index(idx, 8)
+        st = np.asarray(p.split_term)
+        sd = np.asarray(p.split_doc)
+        lo = np.asarray(p.range_lo)
+        hi = np.asarray(p.range_hi)
+        t2s = np.asarray(p.term_to_shard)
+        assert st[0] == -1                    # shard 0 never continues
+        for k in np.flatnonzero(st >= 0):
+            w = int(st[k])
+            # a continued term starts the shard's local range and also
+            # ends the previous shard's
+            assert lo[k] == w and hi[k - 1] == w
+            # the routing table points at the FIRST owner
+            assert t2s[w] < k
+            # split docs ascend along a term's consecutive sub-shards
+            if st[k - 1] == w:
+                assert sd[k - 1] < sd[k]
+        # every shard's range is non-empty and ranges cover the vocab
+        assert (hi >= lo).all()
+        assert lo[0] == 0 and hi[-1] == idx.vocab_size - 1
+
+    def test_per_device_bytes_shrink_on_hot_corpus(self, hot_term_index):
+        """THE byte claim sub-sharding restores: with the hot list split,
+        per-device bytes keep falling ~1/K instead of pinning at the hot
+        list's padded width."""
+        idx = hot_term_index
+        with pytest.warns(UserWarning, match="skewed posting lists"):
+            nosplit = partition_index(idx, 8, split_hot=False)
+        split = partition_index(idx, 8)
+        assert split.doc_ids.shape[1] < nosplit.doc_ids.shape[1]
+        assert split.per_device_nbytes < nosplit.per_device_nbytes
+
+    def test_lookup_pairs_batched_shapes_sub_sharded(self, hot_term_index):
+        idx = hot_term_index
+        p = partition_index(idx, 8)
+        rng = np.random.RandomState(0)
+        terms = jnp.asarray(
+            rng.randint(-1, idx.vocab_size, (3, 5)).astype(np.int32))
+        docs = jnp.asarray(rng.randint(0, idx.n_docs, (3,)).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(p.lookup_pairs(terms, docs)),
+            np.asarray(idx.lookup_pairs(terms, docs)))
+
+    def test_jnp_partial_sum_exact_sub_sharded(self, hot_term_index):
+        """The SPMD partial-sum expression with range-based ownership:
+        each sub-shard of a term owns a disjoint doc slice, so the
+        summation merge stays x + 0 + ... + 0 (bitwise)."""
+        idx = hot_term_index
+        p = partition_index(idx, 8)
+        q = jnp.asarray(np.array([0, 1, 17, -1, 45], np.int32))
+        docs = jnp.asarray(np.arange(0, idx.n_docs + 4, 3, dtype=np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(p.qd_matrix(q, docs, impl="jnp")),
+            np.asarray(idx.qd_matrix(q, docs, impl="jnp")))
+
+    def test_mesh_placed_sub_sharded_engine_matches(self, hot_term_index):
+        from repro.launch.mesh import make_host_mesh
+        idx = hot_term_index
+        mesh = make_host_mesh(data=len(jax.devices()))
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        plain = SeineEngine(idx, "knrm", params)
+        part = SeineEngine(idx, "knrm", params, mesh=mesh,
+                           partition="term", n_shards=8)
+        assert part.index.split_term is not None
+        q = jnp.asarray(np.array([0, 3, 11, -1], np.int32))
+        docs = jnp.arange(32)
+        np.testing.assert_allclose(np.asarray(part.score(q, docs)),
+                                   np.asarray(plain.score(q, docs)),
+                                   rtol=0, atol=0)
+
+    def test_ckpt_round_trip_sub_sharded(self, hot_term_index, tmp_path):
+        """save_index/load_index carry the split tables and rebuild
+        fences: the restored index serves bitwise-identically."""
+        from repro.ckpt import load_index, save_index
+        idx = hot_term_index
+        p = partition_index(idx, 8)
+        d = save_index(str(tmp_path / "idx"), p)
+        r = load_index(d)
+        for name in ("term_offsets", "doc_ids", "values", "term_to_shard",
+                     "range_lo", "range_hi", "split_term", "split_doc"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r, name)), np.asarray(getattr(p, name)),
+                err_msg=name)
+        q = jnp.asarray(np.array([0, 1, 17, -1], np.int32))
+        docs = jnp.asarray(np.arange(0, idx.n_docs, 5, dtype=np.int32))
+        np.testing.assert_array_equal(np.asarray(r.qd_matrix(q, docs)),
+                                      np.asarray(p.qd_matrix(q, docs)))
+
+
 class TestPartitionStructure:
     def test_shards_cover_index_exactly(self, seine_world):
         idx = seine_world["index"]
@@ -119,34 +242,38 @@ class TestPartitionStructure:
         p = partition_index(idx, 4)
         assert p.doc_ids.shape[1] < idx.nnz // 2
 
-    def test_hot_term_skew_warns_but_stays_exact(self, seine_world):
-        """One unsplittable hot posting list defeats the ~1/K byte claim:
-        partition_index must warn — and lookups must STILL be exact."""
+    def test_hot_term_sub_sharded_and_exact(self, hot_term_index):
+        """A Zipfian hot posting list is now SPLIT by doc range: no skew
+        warning, padded width tracks the even split, and lookups stay
+        exact — the ~1/K byte claim survives stopword-heavy corpora."""
         import warnings
-        from repro.core.index import SegmentInvertedIndex, build_from_rows
-        rng = np.random.RandomState(0)
-        n_docs, vocab = 64, 40
-        # term 0 posts in every doc (the hot stopword); the rest are sparse
-        doc_ids = [np.arange(n_docs)]
-        term_ids = [np.zeros(n_docs, np.int64)]
-        for t in range(1, vocab):
-            d = rng.choice(n_docs, size=2, replace=False)
-            doc_ids.append(np.sort(d))
-            term_ids.append(np.full(2, t, np.int64))
-        doc_ids = np.concatenate(doc_ids)
-        term_ids = np.concatenate(term_ids)
-        vals = rng.rand(len(doc_ids), 2, 3).astype(np.float32)
-        idx = build_from_rows(
-            doc_ids, term_ids, vals, idf=np.ones(vocab, np.float32),
-            doc_len=np.full(n_docs, 10.0, np.float32),
-            seg_len=np.full((n_docs, 2), 5.0, np.float32),
-            n_docs=n_docs, vocab_size=vocab, functions=("a", "b", "c"))
+        idx = hot_term_index
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")       # skew must NOT warn
+            p = partition_index(idx, 8)
+        assert p.split_term is not None and p.split_doc is not None
+        assert (np.asarray(p.split_term) >= 0).any()
+        ideal = -(-idx.nnz // 8)
+        assert p.doc_ids.shape[1] <= 2 * ideal
+        assert p.nnz == idx.nnz
+        q = jnp.asarray(np.array([0, 1, 17, -1], np.int32))
+        docs = jnp.asarray(np.arange(0, idx.n_docs, 7, dtype=np.int32))
+        np.testing.assert_array_equal(np.asarray(p.qd_matrix(q, docs)),
+                                      np.asarray(idx.qd_matrix(q, docs)))
+
+    def test_hot_term_skew_warns_without_split(self, hot_term_index):
+        """split_hot=False restores the old term-aligned-only plan: the
+        unsplittable hot list pads every shard up to it — warned — and
+        lookups must STILL be exact."""
+        import warnings
+        idx = hot_term_index
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
-            p = partition_index(idx, 8)
+            p = partition_index(idx, 8, split_hot=False)
         assert any("skewed posting lists" in str(w.message) for w in caught)
+        assert p.split_term is None
         q = jnp.asarray(np.array([0, 1, 17, -1], np.int32))
-        docs = jnp.asarray(np.arange(0, n_docs, 7, dtype=np.int32))
+        docs = jnp.asarray(np.arange(0, idx.n_docs, 7, dtype=np.int32))
         np.testing.assert_array_equal(np.asarray(p.qd_matrix(q, docs)),
                                       np.asarray(idx.qd_matrix(q, docs)))
 

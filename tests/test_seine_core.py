@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from prophelpers import sweep
-from repro.core import (FUNCTION_NAMES, build_vocabulary, segment_corpus,
-                        segment_ids)
+from repro.core import build_vocabulary, segment_corpus, segment_ids
 from repro.core.segment import texttile_boundaries
 
 

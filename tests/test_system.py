@@ -1,7 +1,6 @@
 """End-to-end behaviour of the SEINE system (the paper's pipeline, Fig. 1):
 index -> retrieve -> rank; effectiveness parity between engines; the
 efficiency ordering the paper's Table 1 demonstrates; serving."""
-import time
 
 import jax
 import jax.numpy as jnp
@@ -11,8 +10,7 @@ import pytest
 from repro.data.batching import candidates_for_query
 from repro.data.metrics import evaluate_ranking, mean_metrics
 from repro.retrievers import get_retriever
-from repro.serving import (NoIndexEngine, SeineEngine, make_qmeta,
-                           serve_batches)
+from repro.serving import NoIndexEngine, SeineEngine, serve_batches
 
 
 def _rank_all(engine, w, qi):

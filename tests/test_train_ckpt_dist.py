@@ -1,6 +1,5 @@
 """Training substrate: optimizers, loop, checkpoint/resume, compression,
 fault-tolerance logic."""
-import os
 
 import jax
 import jax.numpy as jnp
