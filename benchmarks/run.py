@@ -3,6 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig2,...]
 
 Prints ``name,us_per_call,derived`` CSV (plus a header comment per suite).
+``--obs-out PATH`` additionally dumps the repro.obs metrics snapshot
+(shard balance, build counters, span timings the suites accumulated) as
+JSON — the bench lane writes OBS_bench.json next to the BENCH_*.json
+artifacts so every gated run ships its observability context.
 """
 from __future__ import annotations
 
@@ -19,6 +23,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--obs-out", default=None,
+                    help="write the repro.obs metrics snapshot here after "
+                         "all suites (.json -> JSON, else Prometheus text)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else SUITES
 
@@ -38,6 +45,10 @@ def main() -> None:
             print(f"# {suite} FAILED:", file=sys.stderr)
             traceback.print_exc()
         print(f"# {suite} done in {time.time()-t0:.1f}s", flush=True)
+    if args.obs_out:
+        from repro import obs
+        obs.write_metrics(args.obs_out)
+        print(f"# obs snapshot -> {args.obs_out}", flush=True)
     sys.exit(1 if failures else 0)
 
 

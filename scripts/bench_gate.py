@@ -211,6 +211,53 @@ def check_serve_gates(serve: dict) -> bool:
     return ok
 
 
+def print_shard_balance(obs_path: str) -> None:
+    """Per-shard balance gauges from the bench run's obs snapshot
+    (OBS_bench.json, written by ``benchmarks.run --obs-out``).  Purely
+    informational — skew context printed next to any serve-gate alert;
+    never affects the exit code, and a missing/unreadable snapshot is
+    only noted (older branches don't produce one)."""
+    if not os.path.exists(obs_path):
+        print(f"shard balance: no obs snapshot at {obs_path} "
+              f"(informational; run benchmarks.run --obs-out)")
+        return
+    try:
+        with open(obs_path) as f:
+            metrics = json.load(f).get("metrics", {})
+    except (OSError, ValueError) as e:
+        print(f"shard balance: cannot read {obs_path}: {e}")
+        return
+
+    def samples(name):
+        return metrics.get(name, {}).get("samples", [])
+
+    def scalar(name):
+        s = samples(name)
+        return s[0]["value"] if s else None
+
+    nnz = {s["labels"].get("shard", "?"): s["value"]
+           for s in samples("seine_shard_nnz")}
+    if not nnz:
+        print(f"shard balance: no seine_shard_nnz in {obs_path}")
+        return
+    per_shard = " ".join(f"shard{k}={int(v)}"
+                         for k, v in sorted(nnz.items(),
+                                            key=lambda kv: int(kv[0])))
+    print(f"shard balance [last partition plan]: {per_shard}")
+    skew_max, skew_mean = (scalar("seine_shard_skew_max_ratio"),
+                           scalar("seine_shard_skew_mean_ratio"))
+    hot = scalar("seine_shard_hot_splits")
+    parts = []
+    if skew_max is not None:
+        parts.append(f"skew max {skew_max:.2f}x")
+    if skew_mean is not None:
+        parts.append(f"mean {skew_mean:.2f}x vs even split")
+    if hot is not None:
+        parts.append(f"{int(hot)} hot-term sub-shard cut(s)")
+    if parts:
+        print(f"shard balance: {'; '.join(parts)}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline-dir", default=None,
@@ -219,6 +266,9 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=float(
         os.environ.get("REPRO_BENCH_GATE_THRESHOLD", DEFAULT_THRESHOLD)),
         help="relative slowdown tolerance (default 1.3)")
+    ap.add_argument("--obs-snapshot", default=os.path.join(
+        REPO_ROOT, "OBS_bench.json"),
+        help="obs JSON snapshot to print shard-balance gauges from")
     args = ap.parse_args(argv)
 
     serve_path = os.path.join(REPO_ROOT, "BENCH_serve.json")
@@ -235,6 +285,7 @@ def main(argv=None) -> int:
               f"(exit code {EXIT_MISSING})")
         return EXIT_MISSING
     ok = check_serve_gates(serve)
+    print_shard_balance(args.obs_snapshot)
 
     if args.baseline_dir is not None:
         for name in BENCH_FILES:

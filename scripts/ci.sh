@@ -58,7 +58,11 @@ case "${1:-full}" in
            git show "HEAD:$f" > "$baseline_dir/$f" 2>/dev/null || \
              rm -f "$baseline_dir/$f"
          done
-         python -m benchmarks.run --only dist,partitioned,index_build
+         # OBS_bench.json: the run's observability snapshot (shard
+         # balance, build counters, span timings) — uploaded next to the
+         # BENCH_*.json artifacts; bench_gate prints its balance gauges
+         python -m benchmarks.run --only dist,partitioned,index_build \
+           --obs-out OBS_bench.json
          # no exec: the EXIT trap must still fire to clean the snapshot
          python scripts/bench_gate.py --baseline-dir "$baseline_dir"
          ;;

@@ -8,7 +8,10 @@ this AST-based subset so the lane still gates something real:
 * unused imports — module- and function-scope, counting ``__all__``
   strings, re-export aliases (``import x as x``) and names used anywhere
   in the file (docstring-only mentions do NOT count);
-* trailing whitespace and tabs in indentation.
+* trailing whitespace and tabs in indentation;
+* bare ``print(`` calls in ``src/repro/`` outside ``launch/`` (T201) —
+  library telemetry belongs on the structured ``repro.obs`` logger, not
+  stdout; opt out per line with ``# noqa``.
 
 Exit code 0 = clean, 1 = findings (printed as file:line: code message —
 the ruff-ish format editors already parse).
@@ -96,6 +99,26 @@ def unused_imports(tree: ast.AST, is_init: bool) -> List[Tuple[int, str]]:
     return findings
 
 
+def print_findings(tree: ast.AST, rel: str) -> List[Tuple[int, str]]:
+    """T201: bare ``print(`` in library code — src/repro/ excluding
+    launch/ (CLI drivers own their stdout).  Telemetry goes through
+    ``repro.obs.get_logger`` so it is levelled, structured and counted;
+    a deliberate print opts out with ``# noqa`` on its line."""
+    rel = rel.replace(os.sep, "/")
+    if not rel.startswith("src/repro/") or \
+            rel.startswith("src/repro/launch/"):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and \
+                node.func.id == "print":
+            findings.append(
+                (node.lineno, "T201 `print` in library code "
+                              "(use repro.obs.get_logger)"))
+    return findings
+
+
 def whitespace_findings(src: str) -> List[Tuple[int, str]]:
     findings = []
     for i, line in enumerate(src.splitlines(), 1):
@@ -116,7 +139,8 @@ def lint_file(path: str) -> List[str]:
     except SyntaxError as e:
         return [f"{rel}:{e.lineno}: E999 {e.msg}"]
     is_init = os.path.basename(path) == "__init__.py"
-    findings = unused_imports(tree, is_init) + whitespace_findings(src)
+    findings = unused_imports(tree, is_init) + whitespace_findings(src) \
+        + print_findings(tree, rel)
     lines = src.splitlines()
     findings = [(line, msg) for line, msg in findings
                 if "# noqa" not in lines[line - 1]]

@@ -25,7 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
+
 _SEP = "/"
+_log = obs.get_logger("repro.ckpt")
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -61,33 +64,60 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     final = os.path.join(ckpt_dir, f"ckpt_{step:010d}")
 
     def write():
-        tmp = final + f".tmp{os.getpid()}"
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(final):
-            import shutil
-            shutil.rmtree(final)
-        os.replace(tmp, final)          # atomic publish
-        _retain(ckpt_dir, keep)
+        try:
+            with obs.span("ckpt.save"):
+                tmp = final + f".tmp{os.getpid()}"
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    import shutil
+                    shutil.rmtree(final)
+                os.replace(tmp, final)          # atomic publish
+                _retain(ckpt_dir, keep)
+            obs.counter("seine_ckpt_saves_total",
+                        "checkpoint publishes").inc()
+        except BaseException as e:
+            obs.counter("seine_ckpt_write_errors_total",
+                        "failed (a)sync ckpt/index writes").inc()
+            _log.error("checkpoint write failed", path=final, err=repr(e))
+            raise
 
     if async_write:
-        t = threading.Thread(target=write, daemon=True)
-        t.start()
-        _ASYNC_THREADS.append(t)
+        _spawn_async(write)
     else:
         write()
     return final
 
 
 _ASYNC_THREADS: List[threading.Thread] = []
+_ASYNC_ERRORS: List[BaseException] = []
+
+
+def _spawn_async(write) -> None:
+    """Run ``write`` on a daemon thread, capturing any failure for
+    :func:`wait_async` to re-raise — a background writer must never fail
+    silently (the obs error counter records it; the join surfaces it)."""
+    def run():
+        try:
+            write()
+        except BaseException as e:
+            _ASYNC_ERRORS.append(e)
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    _ASYNC_THREADS.append(t)
 
 
 def wait_async() -> None:
+    """Join every background writer; re-raise the first captured failure."""
     for t in _ASYNC_THREADS:
         t.join()
     _ASYNC_THREADS.clear()
+    if _ASYNC_ERRORS:
+        err = _ASYNC_ERRORS[0]
+        _ASYNC_ERRORS.clear()
+        raise err
 
 
 def _retain(ckpt_dir: str, keep: int) -> None:
@@ -121,7 +151,8 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 _INDEX_MANIFEST = "index_manifest.json"
 
 
-def save_index(index_dir: str, index: Any) -> str:
+def save_index(index_dir: str, index: Any, *,
+               async_write: bool = False) -> str:
     """Persist a SEINE index with one file PER SHARD.
 
     A :class:`~repro.dist.partition.PartitionedIndex` writes each term-
@@ -132,7 +163,10 @@ def save_index(index_dir: str, index: Any) -> str:
     table, range starts, idf, per-doc stats).  A single-CSR
     :class:`~repro.core.index.SegmentInvertedIndex` is the K=1 special
     case.  Atomic like :func:`save_checkpoint`: tmp dir + ``os.replace``.
-    Returns the final directory path.
+    ``async_write=True`` pushes the file I/O + publish to a background
+    thread (device->host gather stays on the caller thread); failures
+    are recorded on ``seine_ckpt_write_errors_total`` and re-raised by
+    :func:`wait_async`.  Returns the final directory path.
     """
     from ..core.index import SegmentInvertedIndex
     from ..dist.partition import PartitionedIndex
@@ -167,38 +201,62 @@ def save_index(index_dir: str, index: Any) -> str:
         "n_b": int(index.n_b), "functions": list(index.functions),
         "time": time.time(),
     }
-    tmp = index_dir.rstrip("/") + f".tmp{os.getpid()}"
-    os.makedirs(tmp, exist_ok=True)
-    for k in range(n_shards):
-        np.savez(os.path.join(tmp, f"shard_{k:05d}.npz"),
-                 **{n: np.asarray(a) for n, a in shard(k).items()})
-    np.savez(os.path.join(tmp, "common.npz"),
-             **{n: np.asarray(a) for n, a in common.items()})
-    with open(os.path.join(tmp, _INDEX_MANIFEST), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(index_dir):
-        # never rmtree the live index before publishing: move it aside
-        # first, so a writer preempted mid-overwrite leaves the previous
-        # index recoverable at <dir>.old* (load_index falls back to it)
-        # instead of destroyed.  NOTE directory swap cannot be a single
-        # atomic op portably — a reader racing the two os.replace calls
-        # can momentarily miss index_dir; overwrite a live serving path
-        # only behind the .old fallback or publish to a fresh dir.
-        import glob
-        import shutil
-        old = index_dir.rstrip("/") + f".old{os.getpid()}"
-        if os.path.exists(old):
-            shutil.rmtree(old)
-        os.replace(index_dir, old)
-        os.replace(tmp, index_dir)
-        # a successful publish supersedes every stranded leftover —
-        # including .old/.tmp dirs from OTHER (preempted) pids, which
-        # would otherwise accumulate and confuse future recovery
-        for stale in glob.glob(index_dir.rstrip("/") + ".old*") + \
-                glob.glob(index_dir.rstrip("/") + ".tmp*"):
-            shutil.rmtree(stale, ignore_errors=True)
+    # device->host gather on the caller thread (mirrors save_checkpoint:
+    # the background thread only ever does file I/O + the publish swap)
+    shard_arrays = [{n: np.asarray(a) for n, a in shard(k).items()}
+                    for k in range(n_shards)]
+    common_arrays = {n: np.asarray(a) for n, a in common.items()}
+
+    def write():
+        try:
+            with obs.span("ckpt.save_index"):
+                tmp = index_dir.rstrip("/") + f".tmp{os.getpid()}"
+                os.makedirs(tmp, exist_ok=True)
+                for k, arrs in enumerate(shard_arrays):
+                    np.savez(os.path.join(tmp, f"shard_{k:05d}.npz"),
+                             **arrs)
+                np.savez(os.path.join(tmp, "common.npz"), **common_arrays)
+                with open(os.path.join(tmp, _INDEX_MANIFEST), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(index_dir):
+                    # never rmtree the live index before publishing: move
+                    # it aside first, so a writer preempted mid-overwrite
+                    # leaves the previous index recoverable at <dir>.old*
+                    # (load_index falls back to it) instead of destroyed.
+                    # NOTE directory swap cannot be a single atomic op
+                    # portably — a reader racing the two os.replace calls
+                    # can momentarily miss index_dir; overwrite a live
+                    # serving path only behind the .old fallback or
+                    # publish to a fresh dir.
+                    import glob
+                    import shutil
+                    old = index_dir.rstrip("/") + f".old{os.getpid()}"
+                    if os.path.exists(old):
+                        shutil.rmtree(old)
+                    os.replace(index_dir, old)
+                    os.replace(tmp, index_dir)
+                    # a successful publish supersedes every stranded
+                    # leftover — including .old/.tmp dirs from OTHER
+                    # (preempted) pids, which would otherwise accumulate
+                    # and confuse future recovery
+                    for stale in glob.glob(
+                            index_dir.rstrip("/") + ".old*") + \
+                            glob.glob(index_dir.rstrip("/") + ".tmp*"):
+                        shutil.rmtree(stale, ignore_errors=True)
+                else:
+                    os.replace(tmp, index_dir)      # atomic publish
+            obs.counter("seine_index_saves_total",
+                        "index dir publishes").inc()
+        except BaseException as e:
+            obs.counter("seine_ckpt_write_errors_total",
+                        "failed (a)sync ckpt/index writes").inc()
+            _log.error("index save failed", path=index_dir, err=repr(e))
+            raise
+
+    if async_write:
+        _spawn_async(write)
     else:
-        os.replace(tmp, index_dir)      # atomic publish
+        write()
     return index_dir
 
 

@@ -49,11 +49,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs.base import SeineConfig
 from .index import SegmentInvertedIndex, build_shard_from_runs
 from .interactions import init_interaction_params
 from .providers import EmbeddingProvider
 from .vocab import Vocabulary
+
+_log = obs.get_logger("repro.core.build")
 
 
 # ---------------------------------------------------------------------------
@@ -211,9 +214,23 @@ class RunSpiller:
                      values=values)
             run.term_ids = run.doc_ids = run.values = None
             self.spilled_bytes += run.nbytes
+            obs.counter("seine_build_runs_spilled_total",
+                        "posting runs written to spill_dir").inc()
+            obs.counter("seine_build_spill_bytes_total",
+                        "bytes spilled to disk").inc(run.nbytes)
         else:
             self.resident_bytes += run.nbytes
         self.runs.append(run)
+        obs.counter("seine_build_runs_total",
+                    "posting runs produced (resident or spilled)").inc()
+        obs.gauge("seine_build_last_run_bytes",
+                  "size of the newest per-batch run").set(run.nbytes)
+        obs.gauge("seine_build_resident_bytes",
+                  "run bytes currently resident on host").set(
+            self.resident_bytes)
+        obs.gauge("seine_build_peak_host_bytes",
+                  "peak resident run bytes this build").set(
+            self.peak_host_bytes)
         return run
 
     @property
@@ -321,25 +338,40 @@ class BuildPipeline:
 
         spiller = RunSpiller(spill_dir)
         t0 = time.perf_counter()
-        for s in range(0, n_docs, batch_size):
-            e = min(s + batch_size, n_docs)
-            pad = batch_size - (e - s)
-            tb = np.pad(tokens[s:e], ((0, pad), (0, 0)), constant_values=-1)
-            sb = np.pad(seg_ids[s:e], ((0, pad), (0, 0)),
-                        constant_values=n_b - 1)
-            tb_d = jnp.asarray(tb)
-            ub = uniq_fn(tb_d)                                   # stage 1
-            vals = interact_fn(tb_d, jnp.asarray(sb), ub)        # stage 2
-            terms, docs, rows, n_valid = compact_fn(
-                vals, ub, jnp.int32(s))                          # stage 2b
-            n = int(n_valid)
-            # padded docs (rows >= e) carry only -1 uniq slots -> masked out
-            spiller.add(np.asarray(terms[:n]), np.asarray(docs[:n]),
-                        np.asarray(rows[:n], np.float32))        # stage 3
-            if verbose and (s // batch_size) % 16 == 0:
-                print(f"  streamed {e}/{n_docs} docs "
-                      f"({time.perf_counter()-t0:.1f}s, "
-                      f"resident {spiller.resident_bytes/1e6:.1f} MB)")
+        # span semantics: stage-1/2 spans time the async DISPATCH, the
+        # stage-2b span absorbs the device sync (int(n_valid) blocks), and
+        # stage 3 the host copies + spill I/O — together they partition
+        # the wall clock without adding any synchronisation of their own
+        with obs.span("build.stream_runs"):
+            for s in range(0, n_docs, batch_size):
+                e = min(s + batch_size, n_docs)
+                pad = batch_size - (e - s)
+                tb = np.pad(tokens[s:e], ((0, pad), (0, 0)),
+                            constant_values=-1)
+                sb = np.pad(seg_ids[s:e], ((0, pad), (0, 0)),
+                            constant_values=n_b - 1)
+                tb_d = jnp.asarray(tb)
+                with obs.span("build.stage1.uniq"):
+                    ub = uniq_fn(tb_d)                           # stage 1
+                with obs.span("build.stage2.interact"):
+                    vals = interact_fn(tb_d, jnp.asarray(sb), ub)  # stage 2
+                with obs.span("build.stage2b.compact"):
+                    terms, docs, rows, n_valid = compact_fn(
+                        vals, ub, jnp.int32(s))                  # stage 2b
+                    n = int(n_valid)
+                # padded docs (rows >= e): only -1 uniq slots -> masked out
+                with obs.span("build.stage3.spill"):
+                    spiller.add(np.asarray(terms[:n]), np.asarray(docs[:n]),
+                                np.asarray(rows[:n], np.float32))  # stage 3
+                obs.counter("seine_build_docs_total",
+                            "docs through build stages 1-3").inc(e - s)
+                obs.counter("seine_build_batches_total",
+                            "device batches streamed").inc()
+                if verbose and (s // batch_size) % 16 == 0:
+                    _log.info("streamed", docs=f"{e}/{n_docs}",
+                              s=f"{time.perf_counter() - t0:.1f}",
+                              resident_mb=(
+                                  f"{spiller.resident_bytes / 1e6:.1f}"))
         stats = BuildStats(
             n_docs=n_docs, n_batches=len(spiller.runs),
             build_s=time.perf_counter() - t0,
@@ -348,6 +380,10 @@ class BuildPipeline:
             spilled_bytes=spiller.spilled_bytes,
             total_nnz=spiller.total_nnz,
             total_nnz_bytes=spiller.total_nnz_bytes)
+        obs.gauge("seine_build_docs_per_s",
+                  "stage 1-3 streaming throughput").set(stats.docs_per_s)
+        obs.gauge("seine_build_total_nnz",
+                  "postings streamed in the last build").set(stats.total_nnz)
         return spiller, stats
 
     # -- stage 4 entries ----------------------------------------------------
@@ -362,11 +398,14 @@ class BuildPipeline:
             spill_dir=spill_dir, verbose=verbose)
         doc_len, seg_len = compute_doc_seg_lengths(
             tokens, seg_ids, self.cfg.n_segments)
-        index = build_shard_from_runs(
-            spiller.runs, 0, self.vocab.size, idf=self.vocab.idf,
-            doc_len=doc_len, seg_len=seg_len, n_docs=tokens.shape[0],
-            vocab_size=self.vocab.size, n_b=self.cfg.n_segments,
-            functions=self.functions)
+        with obs.span("build.stage4.merge"):
+            obs.gauge("seine_merge_fan_in",
+                      "runs k-way-merged in stage 4").set(len(spiller.runs))
+            index = build_shard_from_runs(
+                spiller.runs, 0, self.vocab.size, idf=self.vocab.idf,
+                doc_len=doc_len, seg_len=seg_len, n_docs=tokens.shape[0],
+                vocab_size=self.vocab.size, n_b=self.cfg.n_segments,
+                functions=self.functions)
         return index, stats
 
     def build_partitioned(self, tokens: np.ndarray, seg_ids: np.ndarray,
@@ -388,9 +427,12 @@ class BuildPipeline:
             spill_dir=spill_dir, verbose=verbose)
         doc_len, seg_len = compute_doc_seg_lengths(
             tokens, seg_ids, self.cfg.n_segments)
-        pidx = partitioned_from_runs(
-            spiller.runs, k, idf=self.vocab.idf, doc_len=doc_len,
-            seg_len=seg_len, n_docs=tokens.shape[0],
-            vocab_size=self.vocab.size, n_b=self.cfg.n_segments,
-            functions=self.functions, mesh=mesh)
+        with obs.span("build.stage4.merge"):
+            obs.gauge("seine_merge_fan_in",
+                      "runs k-way-merged in stage 4").set(len(spiller.runs))
+            pidx = partitioned_from_runs(
+                spiller.runs, k, idf=self.vocab.idf, doc_len=doc_len,
+                seg_len=seg_len, n_docs=tokens.shape[0],
+                vocab_size=self.vocab.size, n_b=self.cfg.n_segments,
+                functions=self.functions, mesh=mesh)
         return pidx, stats

@@ -31,11 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs.base import SeineConfig
 from .index import SegmentInvertedIndex, build_from_rows
 from .interactions import doc_interactions, init_interaction_params
 from .providers import EmbeddingProvider
 from .vocab import Vocabulary
+
+_log = obs.get_logger("repro.core.build")
 
 
 def unique_terms_host(tokens: np.ndarray, max_uniq: int) -> np.ndarray:
@@ -150,8 +153,8 @@ class IndexBuilder:
                 rows_t.append(ub[i, idxs])
                 rows_v.append(vals[i, idxs])
             if verbose and (s // batch_size) % 16 == 0:
-                print(f"  built {e}/{n_docs} docs "
-                      f"({(time.perf_counter()-t0):.1f}s)")
+                _log.info("built", docs=f"{e}/{n_docs}",
+                          s=f"{time.perf_counter() - t0:.1f}")
         from .build_pipeline import compute_doc_seg_lengths
         doc_len, seg_len = compute_doc_seg_lengths(tokens, seg_ids, n_b)
         return build_from_rows(

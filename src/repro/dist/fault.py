@@ -20,6 +20,8 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from .. import obs
+
 
 class Heartbeat:
     """Track per-rank liveness against a deadline.
@@ -37,11 +39,21 @@ class Heartbeat:
 
     def beat(self, rank: int) -> None:
         self._last[rank] = self._clock()
+        obs.gauge("seine_heartbeat_ranks",
+                  "ranks that have ever beaten").set(len(self._last))
 
     def dead_ranks(self) -> List[int]:
         now = self._clock()
-        return sorted(r for r, t in self._last.items()
+        dead = sorted(r for r, t in self._last.items()
                       if now - t > self.deadline_s)
+        if obs.enabled():
+            age = obs.gauge("seine_heartbeat_age_seconds",
+                            "seconds since each rank's last beat")
+            for r, t in self._last.items():
+                age.set(now - t, rank=str(r))
+            obs.gauge("seine_heartbeat_dead_ranks",
+                      "ranks past the liveness deadline").set(len(dead))
+        return dead
 
     def alive_ranks(self) -> List[int]:
         dead = set(self.dead_ranks())
@@ -81,9 +93,15 @@ class StragglerMonitor:
                 del self.flagged[0]
             if self._consecutive % self.admit_every == 0:
                 self._times.append(dt)          # regime-change escape hatch
+            obs.counter("seine_straggler_flagged_total",
+                        "steps flagged slower than tau x median").inc()
         else:
             self._consecutive = 0
             self._times.append(dt)
+        if self._times and obs.enabled():
+            obs.gauge("seine_straggler_median_step_seconds",
+                      "running median step time").set(
+                statistics.median(self._times))
         return slow
 
     @property

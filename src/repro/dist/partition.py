@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.index import csr_lookup_positions, merge_run_parts
 
 
@@ -326,6 +327,23 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
     vmax = max(int(spans.max()), 1)
     nmax = max(int(local_nnz.max()), 1)
     ideal = -(-int(offs[-1]) // k)          # ceil(nnz / k)
+    # shard-balance telemetry: the quantities the padded-storage and
+    # per-device-byte claims ride on (scripts/bench_gate.py prints these
+    # next to any serve regression so skew context comes with the alert)
+    shard_nnz = obs.gauge("seine_shard_nnz", "postings per shard")
+    shard_nnz.clear()               # drop stale shards from a previous plan
+    for i in range(k):
+        shard_nnz.set(int(local_nnz[i]), shard=str(i))
+    obs.gauge("seine_shard_count", "shards in the last partition plan"
+              ).set(k)
+    obs.gauge("seine_shard_skew_max_ratio",
+              "widest shard vs even split").set(nmax / max(ideal, 1))
+    obs.gauge("seine_shard_skew_mean_ratio",
+              "mean shard vs even split").set(
+        float(local_nnz.mean()) / max(ideal, 1))
+    obs.gauge("seine_shard_hot_splits",
+              "doc-range sub-shard cuts in the plan").set(
+        int((ranks[1:k] > 0).sum()) if k > 1 else 0)
     if k > 1 and nmax > 2 * ideal:
         warnings.warn(
             f"partitioned_from_runs: skewed posting lists — widest shard "

@@ -24,6 +24,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .. import obs
+
 Rules = Sequence[Tuple[str, P]]
 
 # axes that carry batch parallelism, in shrink-first order (drop 'pod' first)
@@ -215,6 +217,18 @@ def shard_index(index, mesh: Mesh):
 # term-range partitioning (cross-pod index sharding)
 # ---------------------------------------------------------------------------
 
+def _record_plan_balance(range_nnz: np.ndarray) -> None:
+    """Per-range nnz gauges for the freshly planned cuts — the balance
+    signal :mod:`repro.obs` exports next to the serve-latency metrics
+    (recorded here so BOTH planners and every caller feed it)."""
+    if not obs.enabled():
+        return
+    g = obs.gauge("seine_plan_range_nnz", "planned postings per range")
+    g.clear()
+    for i, n in enumerate(np.asarray(range_nnz)):
+        g.set(int(n), range=str(i))
+
+
 def plan_term_ranges(term_offsets, k: int) -> np.ndarray:
     """Split the vocabulary into ``k`` contiguous term ranges balanced by
     nnz (posting-list mass), not vocab count.
@@ -232,8 +246,10 @@ def plan_term_ranges(term_offsets, k: int) -> np.ndarray:
     nnz = int(offs[-1])
     targets = (np.arange(1, k, dtype=np.int64) * nnz) // k
     cuts = np.searchsorted(offs, targets, side="left")
-    bounds = np.concatenate([[0], cuts, [v]])
-    return np.maximum.accumulate(bounds).clip(0, v)
+    bounds = np.maximum.accumulate(
+        np.concatenate([[0], cuts, [v]])).clip(0, v)
+    _record_plan_balance(np.diff(offs[bounds]))
+    return bounds
 
 
 def plan_posting_ranges(term_offsets, k: int):
@@ -282,7 +298,9 @@ def plan_posting_ranges(term_offsets, k: int):
             bounds[i + 1] = min(
                 int(np.searchsorted(offs, tgt, side="left")), v)
     if not ranks.any():
-        return np.maximum.accumulate(bounds).clip(0, v), ranks
+        bounds = np.maximum.accumulate(bounds).clip(0, v)
+        _record_plan_balance(np.diff(offs[bounds]))
+        return bounds, ranks
     # mixed plan: repair on global posting positions — strictly increasing
     # cuts whenever the postings allow it, so no shard is minted empty
     pos = offs[bounds] + ranks
@@ -294,6 +312,7 @@ def plan_posting_ranges(term_offsets, k: int):
     for i in range(1, k):
         t = int(np.searchsorted(offs, pos[i], side="right")) - 1
         bounds[i], ranks[i] = t, pos[i] - offs[t]
+    _record_plan_balance(np.diff(pos))
     return bounds, ranks
 
 

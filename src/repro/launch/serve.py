@@ -16,6 +16,10 @@ import argparse
 import jax
 import numpy as np
 
+from .. import obs
+
+_log = obs.get_logger("repro.launch.serve")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -41,6 +45,10 @@ def main() -> None:
                     help="spill per-batch posting runs to this directory "
                          "during the build (bounds resident host bytes by "
                          "one run instead of total nnz)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the obs metrics snapshot here after "
+                         "serving: Prometheus text exposition, or a JSON "
+                         "snapshot when the path ends in .json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -68,8 +76,9 @@ def main() -> None:
     else:
         index = builder.build(toks, segs, batch_size=16,
                               spill_dir=args.spill_dir)
-    print(f"[serve] index built: nnz={index.nnz} "
-          f"({index.nbytes/1e6:.1f} MB); {builder.last_build_stats.summary()}")
+    _log.info("index built", nnz=index.nnz,
+              mb=f"{index.nbytes / 1e6:.1f}",
+              stats=builder.last_build_stats.summary())
 
     queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
     rng = np.random.RandomState(args.seed)
@@ -80,16 +89,16 @@ def main() -> None:
         n_dev = len(jax.devices())
         adj = (n_cand // n_dev) * n_dev or n_cand
         if adj != n_cand:
-            print(f"[serve] candidates {n_cand} -> {adj} "
-                  f"(multiple of {n_dev} devices)")
+            _log.info("candidates adjusted", was=n_cand, now=adj,
+                      devices=n_dev)
             n_cand = adj
         if args.batch_pad and args.batch_pad % n_dev:
             # a bucket size that doesn't tile the device count would pad
             # requests to non-divisible shapes and undo the data-parallel
             # placement the lines above just preserved
             adj_pad = -(-args.batch_pad // n_dev) * n_dev
-            print(f"[serve] batch-pad {args.batch_pad} -> {adj_pad} "
-                  f"(multiple of {n_dev} devices)")
+            _log.info("batch-pad adjusted", was=args.batch_pad,
+                      now=adj_pad, devices=n_dev)
             args.batch_pad = adj_pad
     requests = []
     for i in range(args.n_queries):
@@ -104,35 +113,49 @@ def main() -> None:
     if args.data_parallel:
         from .mesh import make_host_mesh
         mesh = make_host_mesh(data=len(jax.devices()))
-        print(f"[serve] data-parallel over {mesh.devices.size} device(s): "
-              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        _log.info("data-parallel", devices=mesh.devices.size,
+                  mesh=dict(zip(mesh.axis_names, mesh.devices.shape)))
     engine = SeineEngine(
         index, args.retriever, params, mesh=mesh,
         partition=None if args.partition == "none" else args.partition,
         n_shards=args.shards or None)
     if args.partition == "term":
         pidx = engine.index
-        print(f"[serve] term-partitioned (shard-native build): "
-              f"{pidx.n_shards} shard(s), "
-              f"{pidx.placed_per_device_nbytes/1e6:.1f} MB/device on this "
-              f"mesh ({pidx.per_device_nbytes/1e6:.1f} MB/device at "
-              f"{pidx.n_shards} devices; total {pidx.nbytes/1e6:.1f} MB)")
+        _log.info(
+            "term-partitioned (shard-native build)",
+            shards=pidx.n_shards,
+            mb_per_device=f"{pidx.placed_per_device_nbytes / 1e6:.1f}",
+            mb_per_device_at_k=f"{pidx.per_device_nbytes / 1e6:.1f}",
+            total_mb=f"{pidx.nbytes / 1e6:.1f}")
+    # single-process liveness: rank 0 beats around the serve loop so the
+    # heartbeat-age gauge lands in the --metrics-out snapshot (the same
+    # gauge a multi-host deployment feeds from dist.fault per rank)
+    from ..dist.fault import Heartbeat
+    hb = Heartbeat()
+    hb.beat(0)
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)  # warm + measure
+    hb.beat(0)
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)
-    print(f"[serve] SEINE    : {stats.ms_per_request:8.2f} ms/request "
-          f"(p50 {stats.p50_ms:.2f} / p95 {stats.p95_ms:.2f} ms, "
-          f"{args.n_queries} requests x {n_cand} candidates)")
+    hb.dead_ranks()                      # records heartbeat-age gauges
+    _log.info("SEINE", ms_per_request=f"{stats.ms_per_request:.2f}",
+              p50=f"{stats.p50_ms:.2f}", p95=f"{stats.p95_ms:.2f}",
+              requests=args.n_queries, candidates=n_cand)
 
     if args.compare_noindex:
         noidx = NoIndexEngine(builder, index, toks, segs, args.retriever,
                               params)
         _, nstats = serve_batches(noidx, requests, batch_pad=args.batch_pad)
         _, nstats = serve_batches(noidx, requests, batch_pad=args.batch_pad)
-        print(f"[serve] No-Index : {nstats.ms_per_request:8.2f} ms/request "
-              f"(p50 {nstats.p50_ms:.2f} / p95 {nstats.p95_ms:.2f} ms) "
-              f"-> speedup {nstats.ms_per_request/stats.ms_per_request:.1f}x")
+        _log.info("No-Index",
+                  ms_per_request=f"{nstats.ms_per_request:.2f}",
+                  p50=f"{nstats.p50_ms:.2f}", p95=f"{nstats.p95_ms:.2f}",
+                  speedup=f"{nstats.ms_per_request / stats.ms_per_request:.1f}x")
+
+    if args.metrics_out:
+        obs.write_metrics(args.metrics_out)
+        _log.info("metrics written", path=args.metrics_out)
 
 
 if __name__ == "__main__":

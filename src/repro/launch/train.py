@@ -20,6 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
+
+_log = obs.get_logger("repro.launch.train")
+
 
 def train_seine_ranker(retriever: str, steps: int, ckpt_dir, *, seed=0,
                        verbose=True):
@@ -42,7 +46,7 @@ def train_seine_ranker(retriever: str, steps: int, ckpt_dir, *, seed=0,
     # streaming staged build (core.build_pipeline) behind the old signature
     index = builder.build(toks, segs, batch_size=16)
     if verbose:
-        print(f"[train] index: {builder.last_build_stats.summary()}")
+        _log.info("index", stats=builder.last_build_stats.summary())
     queries = pad_queries(ds.queries, vocab.map_tokens, q_len=6)
     spec = get_retriever(retriever)
     params = spec.init(jax.random.key(seed), cfg.n_segments, index.functions)
@@ -187,7 +191,9 @@ def main() -> None:
     ap.add_argument("--full", dest="smoke", action="store_false")
     args = ap.parse_args()
 
-    t0 = time.time()
+    # perf_counter, not time.time(): wall-clock is not monotonic (NTP
+    # slews / clock steps corrupt the elapsed-time report)
+    t0 = time.perf_counter()
     if args.workload == "seine-ranker":
         res = train_seine_ranker(args.retriever, args.steps, args.ckpt_dir)
     elif args.workload == "lm":
@@ -198,9 +204,9 @@ def main() -> None:
     else:
         res = train_gnn(args.steps, args.ckpt_dir)
     h = res.history
-    print(f"[train] {len(h)} steps in {time.time()-t0:.1f}s; "
-          f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}; "
-          f"stragglers flagged: {len(res.straggler.flagged)}")
+    _log.info("done", steps=len(h), s=f"{time.perf_counter() - t0:.1f}",
+              loss=f"{h[0]['loss']:.4f}->{h[-1]['loss']:.4f}",
+              stragglers=len(res.straggler.flagged))
 
 
 if __name__ == "__main__":

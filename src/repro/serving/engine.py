@@ -9,6 +9,7 @@ serving driver used by launch/serve.py.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -18,9 +19,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.builder import IndexBuilder
 from ..core.index import PairLookupIndex, SegmentInvertedIndex
 from ..retrievers import QMeta, get_retriever
+
+
+def _sample_every() -> int:
+    """Sampled lookup stats (found-mask hit rate, shard routing) cost a
+    real device lookup, so they run on every N-th score() call only —
+    N from ``REPRO_OBS_SAMPLE``, default 16 (call 1 always samples so
+    short runs still export the gauges).  Read once per engine at
+    construction: an environ read per score() call is measurable at
+    smoke-scale request rates."""
+    try:
+        return max(int(os.environ.get("REPRO_OBS_SAMPLE", "16")), 1)
+    except ValueError:
+        return 16
 
 
 def make_qmeta(index: PairLookupIndex, query_terms: jnp.ndarray,
@@ -114,6 +129,27 @@ class SeineEngine:
         self._lookup_impl = "jnp" if mesh is not None else "fused"
         self._lookup_tile = lookup_tile
         self._score = jax.jit(self._score_impl)
+        # sampled lookup-stats state (mesh-less only; see score()).  The
+        # found-count helper is a SEPARATE lazy jit so sampling can never
+        # perturb the gated ``_score`` program or its compile cache.
+        self._n_calls = 0
+        self._found_fn = None
+        self._t2s_host = None
+        self._sample_every = _sample_every()
+        # per-call registry lookups hoisted to construction: score() is
+        # the serving hot path and the family objects are stable
+        self._scores_counter = obs.counter("seine_engine_scores_total",
+                                           "engine.score calls")
+        if obs.enabled():
+            from ..core.index import POSTING_TILE
+            obs.gauge("seine_index_nnz", "nnz of the served index").set(
+                self.index.nnz)
+            obs.gauge("seine_index_nbytes", "bytes of the served index"
+                      ).set(self.index.nbytes)
+            tile = int(lookup_tile or POSTING_TILE)
+            obs.gauge("seine_lookup_tiles_per_shard",
+                      "posting tiles per shard (ceil(Nmax / tile))").set(
+                -(-int(self.index.doc_ids.shape[-1]) // tile))
 
     def _score_impl(self, params, query_terms, doc_ids):
         m = self.index.qd_matrix(query_terms, doc_ids,
@@ -134,12 +170,97 @@ class SeineEngine:
         return (jax.device_put(query_terms, NamedSharding(self.mesh, P())),
                 jax.device_put(doc_ids, NamedSharding(self.mesh, spec)))
 
+    def _make_found_fn(self):
+        """(query_terms (Q,), doc_ids (B,)) -> (found pairs, valid pairs).
+
+        Built on the same ownership logic as the jnp lookup but returning
+        only the found mask — a lazy jit, compiled on the first sampled
+        call, entirely outside the serving ``_score`` program."""
+        index = self.index
+        from ..dist.partition import PartitionedIndex
+        if not isinstance(index, PartitionedIndex):
+            def impl(qt, docs):
+                q = jnp.broadcast_to(qt[None], (docs.shape[0],) + qt.shape)
+                _, found = index.lookup_positions(q, docs)
+                return found.sum(), (q >= 0).sum()
+            return jax.jit(impl)
+
+        from ..core.index import csr_lookup_positions
+        range_hi = index.range_hi
+
+        def impl(qt, docs):
+            q = jnp.broadcast_to(qt[None], (docs.shape[0],) + qt.shape)
+            w = q.clip(0)
+            d = jnp.broadcast_to(docs[..., None], q.shape)
+            valid = q >= 0
+            shard_of = index.term_to_shard.at[w].get(mode="clip")
+
+            def partial(offsets_k, docs_k, lo_k, hi_k, k):
+                owned = ((shard_of == k) if range_hi is None
+                         else (w >= lo_k) & (w <= hi_k)) & valid
+                local = (w - lo_k).clip(0)
+                _, in_list = csr_lookup_positions(offsets_k, docs_k,
+                                                  local, d)
+                return in_list & owned
+
+            hi = index.range_lo if range_hi is None else range_hi
+            founds = jax.vmap(partial)(
+                index.term_offsets, index.doc_ids, index.range_lo, hi,
+                jnp.arange(index.n_shards,
+                           dtype=index.term_to_shard.dtype))
+            # doc-range sub-shards hold disjoint doc slices of a boundary
+            # term, so at most one sub-shard finds any pair: any == sum
+            return founds.any(axis=0).sum(), valid.sum()
+        return jax.jit(impl)
+
+    def _sample_lookup_stats(self, query_terms, doc_ids) -> None:
+        if self._found_fn is None:
+            self._found_fn = self._make_found_fn()
+            from ..dist.partition import PartitionedIndex
+            if isinstance(self.index, PartitionedIndex):
+                self._t2s_host = np.asarray(self.index.term_to_shard)
+        found, total = self._found_fn(query_terms, doc_ids)
+        found, total = int(found), int(total)
+        obs.counter("seine_lookup_found_total",
+                    "found pairs (sampled)").inc(found)
+        obs.counter("seine_lookup_pairs_sampled_total",
+                    "looked-up pairs (sampled)").inc(total)
+        obs.gauge("seine_lookup_found_ratio",
+                  "found-mask hit rate (sampled)").set(
+            found / max(total, 1))
+        # fused-kernel DMA model: one winning posting tile per valid
+        # (term, doc) cell — `total` IS that cell count for this request
+        obs.gauge("seine_lookup_tile_dmas_per_query",
+                  "posting-tile DMAs per request (sampled)").set(total)
+        qt = np.asarray(query_terms)
+        valid = qt[qt >= 0]
+        n_cand = int(doc_ids.shape[0])
+        pairs = obs.counter("seine_lookup_pairs_total",
+                            "routed pairs per shard (sampled)")
+        if self._t2s_host is not None and valid.size:
+            per = np.bincount(self._t2s_host[valid],
+                              minlength=self.index.n_shards)
+            for k, c in enumerate(per):
+                if c:
+                    pairs.inc(int(c) * n_cand, shard=str(k))
+        elif valid.size:
+            pairs.inc(int(valid.size) * n_cand, shard="0")
+
     def score(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray
               ) -> jnp.ndarray:
         query_terms = jnp.asarray(query_terms)
         doc_ids = jnp.asarray(doc_ids)
         if self.mesh is not None:
             query_terms, doc_ids = self._place(query_terms, doc_ids)
+        if obs.enabled():
+            self._scores_counter.inc()
+            self._n_calls += 1
+            # mesh-less only: the helper jit would trace against sharded
+            # arrays and placed-index sampling adds cross-device collects
+            if self.mesh is None and (self._n_calls == 1 or
+                                      self._n_calls % self._sample_every
+                                      == 0):
+                self._sample_lookup_stats(query_terms, doc_ids)
         return self._score(self.params, query_terms, doc_ids)
 
 
@@ -188,11 +309,20 @@ class ServeStats:
 
     def __post_init__(self):
         self.latencies_ms = deque(self.latencies_ms, maxlen=self.window)
+        # family object cached once: obs.reset() clears samples but keeps
+        # registered families, so the handle stays valid for the stats
+        # object's whole life
+        self._hist = obs.histogram("seine_serve_latency_ms",
+                                   "per-request serve latency (ms)")
 
     def record(self, ms: float) -> None:
         self._n += 1
         self._total_ms += ms
         self.latencies_ms.append(ms)
+        # dual-write: the obs histogram is the exported surface (Prometheus
+        # buckets, JSON snapshot); the deque keeps exact recent-window
+        # quantiles for in-process reporting
+        self._hist.observe(ms)
 
     @property
     def n_requests(self) -> int:
@@ -242,19 +372,43 @@ def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
     """
     stats = ServeStats()
     out = []
+    real_slots = pad_slots = 0
+    req_counter = obs.counter("seine_serve_requests_total",
+                              "serve_batches requests")
     for q, docs in requests:
         docs = np.asarray(docs)
         n = docs.shape[0]
+        req_counter.inc()
+        if n == 0:
+            # degenerate request: no candidates to score.  Short-circuit
+            # to an empty result instead of padding (the pad id comes
+            # from docs[0], which does not exist) or paying a device
+            # round-trip for a (0,) batch.
+            obs.counter("seine_serve_degenerate_requests_total",
+                        "empty-candidate requests").inc()
+            out.append(np.zeros((0,), np.float32))
+            continue
         if batch_pad > 0 and n % batch_pad:
             m = -(-n // batch_pad) * batch_pad
-            pad_id = docs[0] if n else 0
             docs = np.concatenate(
-                [docs, np.full(m - n, pad_id, docs.dtype)])
+                [docs, np.full(m - n, docs[0], docs.dtype)])
+        real_slots += n
+        pad_slots += docs.shape[0] - n
         t0 = time.perf_counter()
         # block on the DEVICE array: np.asarray first would force a blocking
         # host transfer inside the timed region and double-count conversion
-        s = jax.block_until_ready(engine.score(jnp.asarray(q),
-                                               jnp.asarray(docs)))
+        with obs.span("serve.request"):
+            s = jax.block_until_ready(engine.score(jnp.asarray(q),
+                                                   jnp.asarray(docs)))
         stats.record((time.perf_counter() - t0) * 1e3)
         out.append(np.asarray(s)[:n])
+    if obs.enabled() and (real_slots or pad_slots):
+        obs.counter("seine_serve_slots_total",
+                    "real candidate slots scored").inc(real_slots)
+        if pad_slots:
+            obs.counter("seine_serve_pad_slots_total",
+                        "padded candidate slots scored").inc(pad_slots)
+        obs.gauge("seine_serve_pad_waste_ratio",
+                  "pad / (pad + real) slots, most recent call").set(
+            pad_slots / (real_slots + pad_slots))
     return out, stats

@@ -13,10 +13,14 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
 from ..dist.compression import compress_with_feedback
 from ..dist.fault import PreemptionGuard, StragglerMonitor
+from ..obs.metrics import DEFAULT_S_BUCKETS
 from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+_log = obs.get_logger("repro.train")
 
 
 @dataclass
@@ -87,29 +91,42 @@ def fit(state: TrainState, step_fn: Callable, next_batch: Callable[[int], Any],
         state.residual = tree["residual"]
         state.step = manifest["step"]
         if verbose:
-            print(f"[fit] resumed at step {state.step}")
+            _log.info("resumed", step=state.step)
 
     while state.step < n_steps:
         if guard is not None and guard.should_stop:
             if ckpt_dir:
                 _save(ckpt_dir, state, keep, data_state)
             if verbose:
-                print(f"[fit] preempted at step {state.step}; checkpointed")
+                _log.info("preempted; checkpointed", step=state.step)
             return res
         batch = next_batch(state.step)
         t0 = time.perf_counter()
-        state.params, state.opt_state, state.residual, metrics = step_fn(
-            state.params, state.opt_state, state.residual, batch)
-        metrics = {k: float(v) for k, v in
-                   jax.tree.map(lambda x: jax.block_until_ready(x), metrics).items()}
+        with obs.span("train.step"):
+            state.params, state.opt_state, state.residual, metrics = \
+                step_fn(state.params, state.opt_state, state.residual,
+                        batch)
+            metrics = {k: float(v) for k, v in
+                       jax.tree.map(lambda x: jax.block_until_ready(x),
+                                    metrics).items()}
         dt = time.perf_counter() - t0
         slow = res.straggler.record(state.step, dt)
         state.step += 1
+        if obs.enabled():
+            obs.counter("seine_train_steps_total", "optimiser steps").inc()
+            obs.gauge("seine_train_loss",
+                      "most recent train loss").set(metrics["loss"])
+            obs.histogram("seine_train_step_seconds",
+                          "per-step wall time",
+                          buckets=DEFAULT_S_BUCKETS).observe(dt)
         res.history.append({"step": state.step, "sec": dt, **metrics,
                             "straggler": slow})
         if verbose and state.step % log_every == 0:
-            print(f"[fit] step {state.step} loss {metrics['loss']:.4f} "
-                  f"({dt*1e3:.0f} ms{' STRAGGLER' if slow else ''})")
+            fields = dict(step=state.step, loss=f"{metrics['loss']:.4f}",
+                          ms=f"{dt * 1e3:.0f}")
+            if slow:
+                fields["straggler"] = True
+            _log.info("step", **fields)
         if ckpt_dir and state.step % ckpt_every == 0:
             _save(ckpt_dir, state, keep, data_state)
     if ckpt_dir:
