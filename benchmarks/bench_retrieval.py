@@ -1,0 +1,136 @@
+"""First-stage retrieval: whole-corpus top-k throughput + recall gate.
+
+For each serving path — single CSR, term-partitioned K in {2, 4}, and
+the Zipfian hot-term corpus at K=4 (doc-range sub-sharded) — time
+``SeineEngine.retrieve`` walking the ENTIRE corpus from the query's
+posting lists (no candidate set) and check recall@10 against the
+brute-force score-all-docs oracle.  The scan's M blocks are bitwise
+against the pair lookup and the default whole-corpus scan is a single
+block, so recall is exactly 1.0, not approximately — the embedded
+``recall_gate`` record makes that an absolute CI gate
+(scripts/bench_gate.py), alongside the relative queries/s gate vs the
+committed ``BENCH_retrieval.json`` baseline.
+
+    PYTHONPATH=src python -m benchmarks.run --only retrieval
+
+Timing is min-of-N with warmup excluded, same estimator (and rationale)
+as bench_partitioned: scheduler noise on a shared host is one-sided.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import bench_world, emit, zipf_world
+
+K_AT = 10
+REPS = int(os.environ.get("REPRO_BENCH_REPS", 25))
+WARMUP = int(os.environ.get("REPRO_BENCH_WARMUP", 3))
+
+
+def _time_min(f, *args, reps: int = REPS, warmup: int = WARMUP) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def _write_json(name: str, record: dict) -> str:
+    out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", name))
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return out
+
+
+def _recall(engine, queries, k: int) -> float:
+    """Mean recall@k of retrieve() vs scoring every doc and stable
+    argsorting — the oracle the exactness tests pin bit-for-bit."""
+    n_docs = int(engine.index.n_docs)
+    all_docs = jnp.arange(n_docs, dtype=jnp.int32)
+    hits = total = 0
+    for q in queries:
+        oracle = np.asarray(engine.score(q, all_docs))
+        want = set(np.argsort(-oracle, kind="stable")[:k].tolist())
+        _, ids = engine.retrieve(q, k)
+        hits += len(want & set(np.asarray(ids).tolist()))
+        total += k
+    return hits / total
+
+
+def run() -> list:
+    from repro.retrievers import get_retriever
+    from repro.serving import SeineEngine
+
+    w = bench_world()
+    idx = w["index"]
+    queries = [jnp.asarray(q) for q in w["queries"][:4]]
+    spec = get_retriever("knrm")
+    params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+
+    zw = zipf_world()
+    zidx = zw["index"]
+    zqueries = [jnp.asarray(q) for q in zw["queries"]]
+    zparams = spec.init(jax.random.key(0), zidx.n_b, zidx.functions)
+
+    # (path name, engine, queries) — every engine scans its WHOLE corpus
+    paths = [
+        ("csr", SeineEngine(idx, "knrm", params), queries),
+        ("term_k2", SeineEngine(idx, "knrm", params, partition="term",
+                                n_shards=2), queries),
+        ("term_k4", SeineEngine(idx, "knrm", params, partition="term",
+                                n_shards=4), queries),
+        ("zipf_term_k4", SeineEngine(zidx, "knrm", zparams,
+                                     partition="term", n_shards=4),
+         zqueries),
+    ]
+
+    rows = []
+    record = {"k": K_AT, "retriever": "knrm",
+              "timing": {"reps": REPS, "warmup": WARMUP, "stat": "min"},
+              "paths": {}}
+    gate = {"metric": f"recall@{K_AT} == 1.0 vs brute-force oracle "
+                      f"on every path", "per_path": {}}
+    ok = True
+    for name, eng, qs in paths:
+        n_docs = int(eng.index.n_docs)
+        us = _time_min(lambda q: eng.retrieve(q, K_AT), qs[0]) * 1e6
+        recall = _recall(eng, qs, K_AT)
+        record["paths"][name] = {
+            "retrieve_us": us,
+            "queries_per_s": 1e6 / us,
+            "docs_scanned_per_s": n_docs * 1e6 / us,
+            "recall_at_10": recall,
+            "n_docs": n_docs,
+            "nnz": int(eng.index.nnz),
+        }
+        gate["per_path"][name] = {"recall": recall,
+                                  "pass": bool(recall == 1.0)}
+        ok &= recall == 1.0
+        rows.append((f"retrieval/{name}", us,
+                     f"q_per_s={1e6 / us:.1f} recall@{K_AT}={recall:.3f} "
+                     f"corpus={n_docs}"))
+    gate["pass"] = bool(ok)
+    record["recall_gate"] = gate
+
+    path = _write_json("BENCH_retrieval.json", record)
+    rows.append(("retrieval/recall_gate",
+                 min(g["recall"] for g in gate["per_path"].values()),
+                 f"pass={gate['pass']} json={path}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

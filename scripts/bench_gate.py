@@ -14,12 +14,20 @@ BENCH_serve.json:
                         must shrink >= 0.8*K for every K (the doc-range
                         sub-sharding claim).
 
+A third absolute gate reads BENCH_retrieval.json when present:
+
+* ``recall_gate``     — first-stage ``SeineEngine.retrieve`` recall@10
+                        vs the brute-force score-all-docs oracle must be
+                        exactly 1.0 on every serving path (the scan is
+                        bitwise against the pair lookup, so anything
+                        below 1.0 is a correctness bug, not jitter).
+
 Metric classification is by key name, applied recursively over each
 JSON's nested dicts (list indices become path segments):
 
 * ``*_us`` / ``*_ms`` / ``*_s`` / ``*_bytes`` / ``*bytes_per_device``
   -> lower is better (fail when current > threshold * baseline);
-* ``*_per_s`` / ``*_shrink*`` / ``*throughput_ratio*``
+* ``*_per_s`` / ``*_shrink*`` / ``*throughput_ratio*`` / ``*recall*``
   -> higher is better (fail when current < baseline / threshold);
 * anything else (counts, configs, booleans) is ignored.
 
@@ -55,7 +63,7 @@ from typing import Iterator, List, Tuple
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = ("BENCH_partitioned.json", "BENCH_serve.json",
-               "BENCH_build.json")
+               "BENCH_build.json", "BENCH_retrieval.json")
 DEFAULT_THRESHOLD = 1.3
 
 EXIT_PASS, EXIT_FAIL, EXIT_MISSING = 0, 1, 3
@@ -71,7 +79,8 @@ def classify(path: str):
     impl leaves classify by their metric parent (e.g.
     ``paths.term_k2.lookup_us.fused`` gates as ``lookup_us``)."""
     for key in reversed(path.split(".")):
-        if "shrink" in key or "per_s" in key or "throughput_ratio" in key:
+        if "shrink" in key or "per_s" in key or "throughput_ratio" in key \
+                or "recall" in key:
             return "higher"
         if any(key.endswith(s) for s in _LOWER):
             return "lower"
@@ -211,6 +220,22 @@ def check_serve_gates(serve: dict) -> bool:
     return ok
 
 
+def check_retrieval_gate(retr: dict) -> bool:
+    """The absolute recall gate recorded by benchmarks/bench_retrieval:
+    first-stage retrieve must be EXACT (recall@k == 1.0 vs the
+    brute-force oracle) on every serving path — there is no tolerance,
+    the scan's M blocks are bitwise against the pair lookup."""
+    gate = retr.get("recall_gate")
+    if gate is None:
+        print("retrieval recall gate: MISSING from BENCH_retrieval.json")
+        return False
+    per = " ".join(f"{name}:{g['recall']:.3f}"
+                   for name, g in sorted(gate["per_path"].items()))
+    print(f"retrieval recall gate [{gate['metric']}]: {per} "
+          f"-> pass={gate['pass']}")
+    return bool(gate["pass"])
+
+
 def print_shard_balance(obs_path: str) -> None:
     """Per-shard balance gauges from the bench run's obs snapshot
     (OBS_bench.json, written by ``benchmarks.run --obs-out``).  Purely
@@ -285,6 +310,19 @@ def main(argv=None) -> int:
               f"(exit code {EXIT_MISSING})")
         return EXIT_MISSING
     ok = check_serve_gates(serve)
+
+    retr_path = os.path.join(REPO_ROOT, "BENCH_retrieval.json")
+    if not os.path.exists(retr_path):
+        print(f"bench gate: {retr_path} is missing — did the retrieval "
+              f"suite run? (exit code {EXIT_MISSING}, not a regression)")
+        return EXIT_MISSING
+    try:
+        with open(retr_path) as f:
+            ok &= check_retrieval_gate(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {retr_path}: {e} "
+              f"(exit code {EXIT_MISSING})")
+        return EXIT_MISSING
     print_shard_balance(args.obs_snapshot)
 
     if args.baseline_dir is not None:

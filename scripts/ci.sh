@@ -13,19 +13,22 @@
 #                           ruff-less containers still gate something real
 #   scripts/ci.sh bench     perf lanes + the regression gate.  Runs the
 #                           dist-substrate, partitioned-serving (fused vs
-#                           jnp grid + the Zipfian sub-shard corpus) and
-#                           legacy-vs-streaming build benchmarks, emitting
-#                           BENCH_partitioned.json, BENCH_serve.json and
-#                           BENCH_build.json; then scripts/bench_gate.py
-#                           (1) re-checks the absolute serve gates (fused
-#                           K=2 lookup <= replicated jnp; zipf
-#                           bytes_shrink >= 0.8*K), and (2) compares EVERY
-#                           BENCH_*.json metric against the committed
-#                           baseline (snapshotted from HEAD before the
-#                           run), failing on >1.3x latency slowdown or
-#                           equivalent throughput shrink with a per-metric
-#                           table.  Exit codes: 1 = gate failed, 3 = bench
-#                           artifacts missing (never ran), 0 = pass.
+#                           jnp grid + the Zipfian sub-shard corpus),
+#                           legacy-vs-streaming build and first-stage
+#                           retrieval benchmarks, emitting
+#                           BENCH_partitioned.json, BENCH_serve.json,
+#                           BENCH_build.json and BENCH_retrieval.json;
+#                           then scripts/bench_gate.py (1) re-checks the
+#                           absolute gates (fused K=2 lookup <=
+#                           replicated jnp; zipf bytes_shrink >= 0.8*K;
+#                           retrieval recall@10 == 1.0 on every path),
+#                           and (2) compares EVERY BENCH_*.json metric
+#                           against the committed baseline (snapshotted
+#                           from HEAD before the run), failing on >1.3x
+#                           latency slowdown or equivalent throughput
+#                           shrink with a per-metric table.  Exit codes:
+#                           1 = gate failed, 3 = bench artifacts missing
+#                           (never ran), 0 = pass.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -54,14 +57,16 @@ case "${1:-full}" in
          fi ;;
   bench) baseline_dir=$(mktemp -d)
          trap 'rm -rf "$baseline_dir"' EXIT
-         for f in BENCH_partitioned.json BENCH_serve.json BENCH_build.json; do
+         for f in BENCH_partitioned.json BENCH_serve.json \
+                  BENCH_build.json BENCH_retrieval.json; do
            git show "HEAD:$f" > "$baseline_dir/$f" 2>/dev/null || \
              rm -f "$baseline_dir/$f"
          done
          # OBS_bench.json: the run's observability snapshot (shard
          # balance, build counters, span timings) — uploaded next to the
          # BENCH_*.json artifacts; bench_gate prints its balance gauges
-         python -m benchmarks.run --only dist,partitioned,index_build \
+         python -m benchmarks.run \
+           --only dist,partitioned,index_build,retrieval \
            --obs-out OBS_bench.json
          # no exec: the EXIT trap must still fire to clean the snapshot
          python scripts/bench_gate.py --baseline-dir "$baseline_dir"

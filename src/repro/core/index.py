@@ -126,6 +126,11 @@ class PairLookupIndex(Protocol):
                   *, impl: str = None, tile: Optional[int] = None
                   ) -> jnp.ndarray: ...
 
+    def retrieve_topk(self, query_terms: jnp.ndarray, k: int,
+                      score_block_fn, *, doc_block: Optional[int] = None,
+                      impl: str = None, tile: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+
 
 @jax.tree_util.register_dataclass
 @dataclass
@@ -222,6 +227,33 @@ class SegmentInvertedIndex:
             None, None, query_terms, doc_ids,
             fences=None if self.fences is None else self.fences[None],
             tile=tile, interpret=True if impl == "interpret" else None)
+
+    def retrieve_topk(self, query_terms: jnp.ndarray, k: int,
+                      score_block_fn, *, doc_block: Optional[int] = None,
+                      impl: str = None, tile: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """First-stage top-k over the WHOLE corpus — no candidate set.
+
+        Walks the query terms' posting lists block-of-docs at a time
+        (``kernels.csr_lookup.csr_retrieve_topk``), scores each block
+        with ``score_block_fn(M_block (block, Q, n_b, n_f), doc_ids
+        (block,)) -> (block,)``, and streams a device-side
+        ``jax.lax.top_k``.  Returns ``(scores (k,), doc_ids (k,))``,
+        ties broken toward the lower doc id; slots past the corpus size
+        carry ``-inf`` / ``-1``.  Exact vs brute-force score-all-docs:
+        the M blocks are bitwise-equal to the lookup path (rtol=0/atol=0
+        in tests/test_retrieval.py) and the single-block default is
+        score-bitwise too; see ``csr_retrieve_topk`` for the multi-block
+        ulp caveat.  ``impl`` as in :meth:`qd_matrix` (``"jnp"`` forces
+        the jnp scan, ``"interpret"`` the Pallas interpreter).  Not
+        jit'd — callers jit around the closure.
+        """
+        from ..kernels.csr_lookup import csr_retrieve_topk
+        return csr_retrieve_topk(
+            self.term_offsets[None], self.doc_ids[None], self.values[None],
+            None, None, None, query_terms, n_docs=self.n_docs, k=k,
+            score_block_fn=score_block_fn, doc_block=doc_block, tile=tile,
+            impl=impl)
 
 
 def merge_run_parts(parts: list, t_lo: int, t_hi: int, *, n_b: int,

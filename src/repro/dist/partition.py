@@ -231,6 +231,29 @@ class PartitionedIndex:
             split_doc=self.split_doc, tile=tile,
             interpret=True if impl == "interpret" else None)
 
+    def retrieve_topk(self, query_terms: jnp.ndarray, k: int,
+                      score_block_fn, *, doc_block: Optional[int] = None,
+                      impl: str = None, tile: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """First-stage top-k over the whole corpus — no candidate set.
+
+        Same contract as
+        :meth:`~repro.core.index.SegmentInvertedIndex.retrieve_topk`,
+        over the K-stacked shard layout.  The (query, shard) lane grid
+        walks each shard's posting slice for each query term; ownership
+        is range-based when ``range_hi`` is known, so a doc-range
+        sub-sharded hot term contributes each doc exactly once (the
+        sub-shards hold disjoint doc slices) and the cross-shard merge
+        stays an exclusive segment scatter — no per-pair ``route_pairs``
+        needed on the scan path.
+        """
+        from ..kernels.csr_lookup import csr_retrieve_topk
+        return csr_retrieve_topk(
+            self.term_offsets, self.doc_ids, self.values,
+            self.term_to_shard, self.range_lo, self.range_hi, query_terms,
+            n_docs=self.n_docs, k=k, score_block_fn=score_block_fn,
+            doc_block=doc_block, tile=tile, impl=impl)
+
 
 # ---------------------------------------------------------------------------
 # shard-native assembly from term-sorted posting runs (the streaming build)

@@ -1,5 +1,9 @@
-from .ops import (csr_lookup, csr_lookup_ref, lookup_pairs_ref,
-                  route_pairs, route_terms)
+from .ops import (csr_lookup, csr_lookup_ref, csr_retrieve_block,
+                  csr_retrieve_topk, lookup_pairs_ref, merge_windows,
+                  retrieve_block_ref, retrieve_lanes, route_pairs,
+                  route_terms)
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref",
-           "route_pairs", "route_terms"]
+__all__ = ["csr_lookup", "csr_lookup_ref", "csr_retrieve_block",
+           "csr_retrieve_topk", "lookup_pairs_ref", "merge_windows",
+           "retrieve_block_ref", "retrieve_lanes", "route_pairs",
+           "route_terms"]

@@ -135,6 +135,85 @@ def _make_kernel(tile: int, n_fence_iter: int, n_tile_iter: int,
     return _kernel
 
 
+def _make_retrieve_kernel(tile: int, n_pad: int):
+    def _kernel(k_ref, start_ref, dids_ref, vals_ref, ids_out, vals_out,
+                sem_i, sem_v):
+        lane = pl.program_id(0)
+        w = pl.program_id(1)
+        k = k_ref[lane]
+        # window w of this lane starts `w * tile` postings into the
+        # lane's range; the clamp only engages when every position in
+        # the window is past the shard's real postings (masked to the
+        # overflow bin by merge_windows), so the copied offsets never
+        # shift for a position that is still live
+        s = jnp.clip(start_ref[lane] + w * tile, 0, n_pad - tile)
+        cp_i = pltpu.make_async_copy(
+            dids_ref.at[pl.ds(k, 1), pl.ds(s, tile)], ids_out, sem_i)
+        cp_v = pltpu.make_async_copy(
+            vals_ref.at[pl.ds(k, 1), pl.ds(s, tile)], vals_out, sem_v)
+        cp_i.start()
+        cp_v.start()
+        cp_i.wait()
+        cp_v.wait()
+
+    return _kernel
+
+
+def retrieve_windows_pallas(lane_shard: jnp.ndarray, lane_start: jnp.ndarray,
+                            doc_ids: jnp.ndarray, values: jnp.ndarray, *,
+                            tile: int, n_win: int,
+                            interpret: bool = False):
+    """Posting-range window gather for first-stage retrieval.
+
+    Where the serving kernel resolves one (term, doc) pair per grid
+    cell, retrieval walks whole posting ranges: lane l (a flattened
+    (query-slot, shard) pair) owns the contiguous posting slice starting
+    at local position ``lane_start[l]`` of shard ``lane_shard[l]``, and
+    grid cell (l, w) DMAs the w-th ``tile``-wide window of doc ids AND
+    values HBM -> VMEM straight into the output blocks — two genuinely
+    dynamic unaligned copies per cell, no compute.  The segment-sum
+    merge (``ref.merge_windows``) happens outside: it is a scatter, which
+    the VPU has no efficient primitive for, while the gather is pure DMA
+    bandwidth the kernel overlaps across grid cells.
+
+    ``doc_ids (K, n_pad)`` / ``values (K, n_pad, n_b, n_f)`` must be
+    padded one tile PAST the fence padding (ops does this) so a window
+    starting at any live position < Nmax stays in bounds.  Returns
+    ``(ids (L, n_win*tile) int32, vals (L, n_win*tile, n_b, n_f) f32)``.
+    """
+    n_lanes = lane_shard.shape[0]
+    n_pad = doc_ids.shape[1]
+    n_b, n_f = values.shape[2], values.shape[3]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # lane_shard, lane_start
+        grid=(n_lanes, n_win),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),      # doc_ids stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),      # values stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda l, w, k, s: (l, w)),
+            pl.BlockSpec((1, tile, n_b, n_f),
+                         lambda l, w, k, s: (l, w, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        _make_retrieve_kernel(tile, n_pad),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes, n_win * tile), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, n_win * tile, n_b, n_f),
+                                 jnp.float32),
+        ],
+        interpret=interpret,
+    )(lane_shard.astype(jnp.int32), lane_start.astype(jnp.int32),
+      doc_ids, values.astype(jnp.float32))
+
+
 def csr_lookup_pallas(shard: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
                       doc_targets: jnp.ndarray, doc_ids: jnp.ndarray,
                       fences: jnp.ndarray, values: jnp.ndarray, *,

@@ -27,9 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import csr_lookup_pallas
-from .ref import (csr_lookup_ref, lookup_pairs_ref, route_pairs,
-                  route_terms)
+from .kernel import csr_lookup_pallas, retrieve_windows_pallas
+from .ref import (bisect_steps, csr_lookup_ref, lookup_pairs_ref,
+                  merge_windows, retrieve_block_ref, retrieve_lanes,
+                  route_pairs, route_terms)
 
 
 @partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -85,5 +86,179 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
         values.astype(jnp.float32), tile=t, interpret=bool(interpret))
 
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "lookup_pairs_ref",
-           "route_pairs", "route_terms"]
+def _pad_for_windows(doc_ids, values, t):
+    """Pad postings one tile PAST the fence padding so a window DMA
+    starting at any live local position <= Nmax stays in bounds."""
+    from ...core.index import fence_count
+
+    n = doc_ids.shape[1]
+    pad = fence_count(n, t) * t + t - n
+    dids_p = jnp.pad(doc_ids, ((0, 0), (0, pad)),
+                     constant_values=np.iinfo(np.int32).max)
+    vals_p = jnp.pad(values.astype(jnp.float32),
+                     ((0, 0), (0, pad)) + ((0, 0),) * (values.ndim - 2))
+    return dids_p, vals_p
+
+
+def _retrieve_block_windows(term_offsets, dids_p, vals_p, term_to_shard,
+                            range_lo, range_hi, query_terms, blo, block,
+                            t, interpret):
+    """Kernel-path doc block: locate lane windows in jnp, gather via the
+    Pallas window kernel, merge with the shared segment scatter.
+
+    The jnp part — lane ranges plus two range bisects per lane, the same
+    branchless ``core.index._bisect`` the lookup runs, O(log Nmax) each —
+    stays outside the kernel; the kernel only streams the located
+    windows HBM -> VMEM.  ``dids_p``/``vals_p`` come pre-padded from
+    :func:`_pad_for_windows` (hoisted out of the top-k block loop so the
+    O(nnz) values pad is paid once per retrieve, not per block).
+    """
+    from ...core.index import _bisect
+
+    k_n, n_pad = dids_p.shape
+    q_n = query_terms.shape[0]
+    flat = dids_p.reshape(k_n * n_pad)
+    lo_f, hi_f = retrieve_lanes(query_terms, term_offsets, term_to_shard,
+                                range_lo, range_hi, n_pad)
+    steps = bisect_steps(n_pad)
+    s_lo = _bisect(flat, lo_f, hi_f, jnp.broadcast_to(blo, lo_f.shape),
+                   n_iter=steps)
+    s_hi = _bisect(flat, lo_f, hi_f,
+                   jnp.broadcast_to(blo + block, lo_f.shape), n_iter=steps)
+    base = jnp.arange(k_n, dtype=jnp.int32)[None, :] * n_pad
+    lane_start = (s_lo - base).reshape(-1)
+    lane_k = jnp.broadcast_to(jnp.arange(k_n, dtype=jnp.int32)[None, :],
+                              (q_n, k_n)).reshape(-1)
+    n_win = -(-block // t)
+    ids_w, vals_w = retrieve_windows_pallas(
+        lane_k, lane_start, dids_p, vals_p, tile=t, n_win=n_win,
+        interpret=interpret)
+    w = n_win * t
+    doc_win = ids_w.reshape(q_n, k_n, w)
+    val_win = vals_w.reshape((q_n, k_n, w) + vals_p.shape[2:])
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
+
+
+def _retrieve_dispatch(impl):
+    """Map the index-level ``impl`` knob onto (use_ref, interpret).
+
+    Unlike the lookup — where ``"jnp"`` is a *different* expression kept
+    at the index layer for mesh partitioning — the retrieval scan's jnp
+    reference IS the jnp path, so the mapping lives here: None/"fused"
+    auto-dispatch (TPU kernel, jnp ref elsewhere), "jnp" forces the ref,
+    "interpret" forces the Pallas interpreter (parity sweeps).
+    """
+    if impl not in (None, "fused", "jnp", "interpret"):
+        raise ValueError(f"unknown retrieve impl {impl!r}; supported: "
+                         "'fused', 'jnp', 'interpret'")
+    if impl == "jnp":
+        return True, False
+    if impl == "interpret":
+        return False, True
+    return jax.default_backend() != "tpu", False
+
+
+@partial(jax.jit, static_argnames=("block", "tile", "impl"))
+def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                       values: jnp.ndarray, term_to_shard, range_lo,
+                       range_hi, query_terms: jnp.ndarray, blo, *,
+                       block: int, tile: int | None = None,
+                       impl: str | None = None) -> jnp.ndarray:
+    """Posting-range scan entry point: M rows for docs
+    ``[blo, blo + block)`` x query_terms (Q,) over a K-stacked shard CSR
+    -> (block, Q, n_b, n_f), built by walking the query's posting lists
+    instead of bisecting per (term, doc) pair.
+
+    Results are exact vs the per-pair lookup: exclusive shard ownership
+    means the segment merge writes each cell at most once, zeros
+    elsewhere (the sigma=0 semantics).  Dispatch via ``impl`` — see
+    :func:`_retrieve_dispatch`.
+    """
+    use_ref, interpret = _retrieve_dispatch(impl)
+    if use_ref:
+        return retrieve_block_ref(term_offsets, doc_ids, values,
+                                  term_to_shard, range_lo, range_hi,
+                                  query_terms, blo, block)
+    from ...core.index import POSTING_TILE
+
+    t = int(tile or POSTING_TILE)
+    dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
+    return _retrieve_block_windows(term_offsets, dids_p, vals_p,
+                                   term_to_shard, range_lo, range_hi,
+                                   query_terms, blo, block, t, interpret)
+
+
+def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                      values: jnp.ndarray, term_to_shard, range_lo,
+                      range_hi, query_terms: jnp.ndarray, *, n_docs: int,
+                      k: int, score_block_fn, doc_block: int | None = None,
+                      tile: int | None = None, impl: str | None = None):
+    """First-stage top-k driver: scan the whole corpus in doc blocks,
+    score each block with ``score_block_fn(M_block, doc_ids_block) ->
+    (block,)``, and keep a running device-side top-k.
+
+    The merge is a streaming ``jax.lax.top_k`` over
+    ``concat([running, block_scores])`` inside a ``fori_loop``; because
+    the running entries come first and blocks arrive in ascending doc
+    order, ties break toward the LOWER doc id — the same order as
+    ``np.argsort(-scores, kind="stable")`` on the brute-force oracle.
+    Returns ``(scores (k,), doc_ids (k,))``; when k exceeds the corpus,
+    the tail slots carry ``-inf`` scores and doc id ``-1``.
+
+    Exactness: the M blocks are bitwise-equal to the per-pair lookup
+    (rtol=0/atol=0, tests/test_retrieval.py), so the ranking matches the
+    brute-force oracle exactly.  Score VALUES are bitwise-equal too when
+    the corpus fits one block (``doc_block`` defaults to the whole
+    corpus up to 1024 docs — the single-block path skips the loop so its
+    compilation context matches a direct score call); across multiple
+    blocks XLA fuses the scorer into the loop body and may drift by
+    ~1 ulp, which can only reorder docs whose true scores are closer
+    than that noise — i.e. effective ties.
+
+    Not jit'd here: ``score_block_fn`` is typically a fresh closure per
+    call (it would force a retrace as a static argument), so callers jit
+    their own wrapper — ``SeineEngine.retrieve`` does.
+    """
+    n_docs = int(n_docs)
+    k = int(k)
+    block = int(doc_block or min(max(n_docs, 1), 1024))
+    n_blocks = -(-max(n_docs, 1) // block)
+    use_ref, interpret = _retrieve_dispatch(impl)
+    if use_ref:
+        def block_m(blo):
+            return retrieve_block_ref(term_offsets, doc_ids, values,
+                                      term_to_shard, range_lo, range_hi,
+                                      query_terms, blo, block)
+    else:
+        from ...core.index import POSTING_TILE
+
+        t = int(tile or POSTING_TILE)
+        dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
+
+        def block_m(blo):
+            return _retrieve_block_windows(
+                term_offsets, dids_p, vals_p, term_to_shard, range_lo,
+                range_hi, query_terms, blo, block, t, interpret)
+
+    init = (jnp.full((k,), -jnp.inf, jnp.float32),
+            jnp.full((k,), -1, jnp.int32))
+
+    def body(b, carry):
+        run_v, run_i = carry
+        blo = b * block
+        m = block_m(blo)
+        docs = blo + jnp.arange(block, dtype=jnp.int32)
+        s = score_block_fn(m, docs).astype(jnp.float32)
+        s = jnp.where(docs < n_docs, s, -jnp.inf)
+        top_v, idx = jax.lax.top_k(jnp.concatenate([run_v, s]), k)
+        return top_v, jnp.concatenate([run_i, docs])[idx]
+
+    if n_blocks == 1:
+        return body(0, init)
+    return jax.lax.fori_loop(0, n_blocks, body, init)
+
+
+__all__ = ["csr_lookup", "csr_lookup_ref", "csr_retrieve_block",
+           "csr_retrieve_topk", "lookup_pairs_ref", "merge_windows",
+           "retrieve_block_ref", "retrieve_lanes", "route_pairs",
+           "route_terms"]

@@ -41,6 +41,7 @@ write merge exact.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -145,6 +146,113 @@ def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     in_list = (pos < base + hi) & (flat.at[pos].get(mode="clip") == d)
     vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
     return vals * in_list[..., None, None]
+
+
+def retrieve_lanes(query_terms: jnp.ndarray, term_offsets: jnp.ndarray,
+                   term_to_shard, range_lo, range_hi, n_max: int):
+    """Per-(query-slot, shard) posting ranges in the FLAT position space.
+
+    First-stage retrieval inverts the serving lookup: instead of
+    resolving one (term, doc) pair it must walk EVERY posting of every
+    query term.  A term's postings live in its owning shard — or, for a
+    doc-range sub-sharded hot term, in a consecutive run of shards each
+    holding a disjoint doc slice (the same exclusive ownership
+    :func:`route_pairs` resolves per pair) — so the (Q, K) lane grid
+    covers the union exactly once: lane (q, k) is the possibly-empty
+    slice of shard k's postings for query term q.
+
+    Ownership mirrors the jnp partial-sum path: term-range based when
+    ``range_hi`` is known (sub-sharded boundary terms are owned by every
+    neighbour holding a doc slice), table equality for legacy
+    checkpoints, and unconditional for the single-CSR case
+    (``term_to_shard is None``, K == 1).
+
+    Returns ``(lo, hi)``, each (Q, K) int32 positions into
+    ``doc_ids.reshape(K * n_max)``; ``lo == hi`` for lanes owning
+    nothing (invalid / OOV / past-vocab terms, non-owning shards).
+    """
+    k_count, vmax1 = term_offsets.shape
+    vmax = vmax1 - 1
+    w = query_terms.clip(0)[:, None]                      # (Q, 1)
+    ks = jnp.arange(k_count, dtype=jnp.int32)[None, :]    # (1, K)
+    valid = (query_terms >= 0)[:, None]
+    if term_to_shard is None:
+        owned = valid
+        lo_k = jnp.zeros((1, k_count), jnp.int32)
+    else:
+        lo_k = range_lo[None, :]
+        if range_hi is None:
+            owned = (term_to_shard.at[query_terms.clip(0)]
+                     .get(mode="clip")[:, None] == ks) & valid
+        else:
+            owned = (w >= lo_k) & (w <= range_hi[None, :]) & valid
+    row = (w - lo_k).clip(0, vmax)
+    lo = term_offsets[ks, row]
+    hi = term_offsets[ks, (row + 1).clip(0, vmax)]
+    hi = jnp.where(owned, hi, lo)
+    lo = jnp.where(owned, lo, hi)
+    base = ks * n_max
+    return base + lo, base + hi
+
+
+def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
+                  n_valid: jnp.ndarray, blo, block: int) -> jnp.ndarray:
+    """Scatter gathered posting windows into one dense doc-block of M.
+
+    ``doc_win`` (Q, K, W) doc ids / ``val_win`` (Q, K, W, n_b, n_f)
+    values, of which the first ``n_valid`` (Q, K) entries per lane are
+    real postings with doc ids in ``[blo, blo + block)``.  Because every
+    (term, doc) pair is stored in exactly one shard, the lanes of a
+    query slot are disjoint in doc space and the segment-sum writes each
+    (doc, term) output cell at most once — zeros elsewhere, the sigma=0
+    semantics — so the result equals the per-pair lookup bit-for-bit
+    (modulo ±0, which the exact-zero merge semantics treat as equal).
+
+    Returns M (block, Q, n_b, n_f).
+    """
+    q_n, k_n, w_n = doc_win.shape
+    in_win = jnp.arange(w_n)[None, None, :] < n_valid[..., None]
+    seg = jnp.where(in_win, doc_win - blo, block)         # overflow bin
+    seg = seg.reshape(q_n, k_n * w_n)
+    vals = val_win.reshape((q_n, k_n * w_n) + val_win.shape[3:])
+    m = jax.vmap(lambda v, s: jax.ops.segment_sum(
+        v, s, num_segments=block + 1))(vals, seg)
+    return jnp.swapaxes(m[:, :block], 0, 1)               # (block, Q, ...)
+
+
+def retrieve_block_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
+                       values: jnp.ndarray, term_to_shard, range_lo,
+                       range_hi, query_terms: jnp.ndarray, blo,
+                       block: int) -> jnp.ndarray:
+    """One doc block of the first-stage posting scan, pure jnp.
+
+    Builds M rows for docs ``[blo, blo + block)`` x every query term by
+    iterating the query's posting ranges instead of bisecting per
+    (term, doc) pair: a term stores at most one posting per doc, so the
+    postings of lane (q, k) inside the block are a contiguous slice of
+    length <= ``block``, located with two range bisects (the same
+    branchless :func:`~repro.core.index._bisect` the lookup runs) and
+    gathered as one window.  Work per block is O(Q·K·(log Nmax + block))
+    — independent of posting-list length — vs the per-pair lookup's
+    O(Q·block·log) bisects; the kernel path DMAs the same windows
+    tile-by-tile.  Returns M (block, Q, n_b, n_f).
+    """
+    from ...core.index import _bisect
+
+    k_n, n = doc_ids.shape
+    flat = doc_ids.reshape(k_n * n)
+    lo_f, hi_f = retrieve_lanes(query_terms, term_offsets, term_to_shard,
+                                range_lo, range_hi, n)
+    steps = bisect_steps(n)
+    s_lo = _bisect(flat, lo_f, hi_f,
+                   jnp.broadcast_to(blo, lo_f.shape), n_iter=steps)
+    s_hi = _bisect(flat, lo_f, hi_f,
+                   jnp.broadcast_to(blo + block, lo_f.shape), n_iter=steps)
+    p = s_lo[..., None] + jnp.arange(block)               # (Q, K, block)
+    doc_win = flat.at[p].get(mode="clip")
+    flat_vals = values.reshape((k_n * n,) + values.shape[2:])
+    val_win = flat_vals.at[p].get(mode="clip")
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
 
 
 def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,

@@ -7,7 +7,9 @@ Builds the (smoke-scale) index, serves batched requests through both
 engines and reports mean/p50/p95 ms/request — the Table-1 efficiency
 comparison as a service.  ``--partition term --shards K`` serves through
 the term-range PartitionedIndex (no replicated CSR skeleton) instead of
-the replicated-skeleton shard_index placement.
+the replicated-skeleton shard_index placement.  ``--retrieve-k K``
+switches to first-stage mode: no candidate sets — each query walks the
+index and returns its corpus-wide top-K (``SeineEngine.retrieve``).
 """
 from __future__ import annotations
 
@@ -37,6 +39,12 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="shard count for --partition term (default: the "
                          "mesh model-axis size, or 1 without a mesh)")
+    ap.add_argument("--retrieve-k", type=int, default=0, metavar="K",
+                    help="first-stage retrieval mode: ignore candidate "
+                         "sets and return each query's corpus-wide top-K "
+                         "docs by walking the index's posting lists "
+                         "(mesh-less only; 0 = off, serve candidate "
+                         "re-scoring as before)")
     ap.add_argument("--batch-pad", type=int, default=0,
                     help="pad candidate sets to multiples of this bucket "
                          "size before scoring (avoids one jit recompile "
@@ -58,7 +66,14 @@ def main() -> None:
     from ..data.batching import candidates_for_query, pad_queries
     from ..data.synth_corpus import generate
     from ..retrievers import get_retriever
-    from ..serving import NoIndexEngine, SeineEngine, serve_batches
+    from ..serving import (NoIndexEngine, SeineEngine, serve_batches,
+                           serve_retrieval)
+
+    if args.retrieve_k and args.data_parallel:
+        ap.error("--retrieve-k is mesh-less only (the scan's segment "
+                 "scatter has no SPMD lowering yet); drop --data-parallel")
+    if args.retrieve_k < 0:
+        ap.error(f"--retrieve-k must be >= 0, got {args.retrieve_k}")
 
     cfg = seine_smoke()
     ds = generate(cfg, seed=args.seed)
@@ -133,6 +148,24 @@ def main() -> None:
     from ..dist.fault import Heartbeat
     hb = Heartbeat()
     hb.beat(0)
+    if args.retrieve_k:
+        # first-stage mode: the candidate sets are ignored — each query
+        # produces its own top-K from the whole corpus
+        qs = [q for q, _ in requests]
+        _, stats = serve_retrieval(engine, qs, args.retrieve_k)  # warm
+        hb.beat(0)
+        results, stats = serve_retrieval(engine, qs, args.retrieve_k)
+        hb.dead_ranks()
+        _log.info("SEINE first-stage",
+                  ms_per_request=f"{stats.ms_per_request:.2f}",
+                  p50=f"{stats.p50_ms:.2f}", p95=f"{stats.p95_ms:.2f}",
+                  requests=args.n_queries, k=args.retrieve_k,
+                  corpus=index.n_docs,
+                  top1=int(results[0][1][0]) if results else -1)
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            _log.info("metrics written", path=args.metrics_out)
+        return
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)  # warm + measure
     hb.beat(0)

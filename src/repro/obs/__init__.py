@@ -60,6 +60,11 @@ seine_shard_hot_splits                gauge     doc-range sub-shard cuts
 seine_index_nnz                       gauge     nnz of the served index
 seine_index_nbytes                    gauge     bytes of the served index
 seine_engine_scores_total             counter   engine.score calls
+seine_engine_retrieves_total          counter   engine.retrieve calls
+seine_retrieve_requests_total         counter   serve_retrieval requests
+seine_retrieve_docs_scanned_total     counter   corpus docs scanned by
+                                                retrieve (n_docs per call)
+seine_retrieve_last_k                 gauge     trimmed k of last retrieve
 seine_serve_requests_total            counter   serve_batches requests
 seine_serve_degenerate_requests_total counter   empty-candidate requests
 seine_serve_latency_ms                histogram per-request serve latency

@@ -92,6 +92,17 @@ class SeineEngine:
         if partition not in (None, "term"):
             raise ValueError(f"unknown partition scheme {partition!r}; "
                              "supported: 'term'")
+        # reject, don't coerce: n_shards=0 used to fall through the falsy
+        # `or` chain below and silently serve the mesh default — a surprise
+        # configuration is worse than an error
+        if n_shards is not None and int(n_shards) <= 0:
+            raise ValueError(f"n_shards must be positive, got {n_shards}; "
+                             "pass None to default to the mesh's "
+                             "model-axis size")
+        if lookup_tile is not None and int(lookup_tile) <= 0:
+            raise ValueError(
+                f"lookup_tile must be positive, got {lookup_tile}; "
+                "pass None for the default POSTING_TILE")
         self.mesh = mesh
         # mesh-less default: _place is never called, but must not crash if
         # it ever is (latent AttributeError — _data_axes was only assigned
@@ -105,8 +116,12 @@ class SeineEngine:
                 index = shard_partitioned_index(index, mesh)
         elif partition == "term":
             from ..dist.sharding import partition_index
-            k = int(n_shards or (mesh and dict(
-                zip(mesh.axis_names, mesh.devices.shape)).get("model")) or 1)
+            if n_shards is not None:
+                k = int(n_shards)
+            else:
+                k = int((mesh and dict(
+                    zip(mesh.axis_names,
+                        mesh.devices.shape)).get("model")) or 1)
             # K beyond the populated term ranges is clamped (with a
             # warning) by the merger itself — partitioned_from_runs, the
             # single guard every build path shares — so tiny vocabularies
@@ -136,6 +151,18 @@ class SeineEngine:
         self._found_fn = None
         self._t2s_host = None
         self._sample_every = _sample_every()
+        # serve loops flip this on so a sampled call only STAGES its
+        # arguments here; the extra device lookup + blocking int() syncs
+        # then run in flush_lookup_stats(), outside the timed region
+        self.defer_lookup_stats = False
+        self._pending_stats = None
+        # first-stage retrieval: one jit per static k (jax caches per
+        # (k, doc_block) pair); retrieve() trims k > n_docs before jitting
+        # so a sweep of oversized ks shares one compiled program
+        self._retrieve = jax.jit(self._retrieve_impl,
+                                 static_argnames=("k", "doc_block"))
+        self._retrieves_counter = obs.counter(
+            "seine_engine_retrieves_total", "engine.retrieve calls")
         # per-call registry lookups hoisted to construction: score() is
         # the serving hot path and the family objects are stable
         self._scores_counter = obs.counter("seine_engine_scores_total",
@@ -157,6 +184,68 @@ class SeineEngine:
                                  tile=self._lookup_tile)
         meta = make_qmeta(self.index, query_terms, doc_ids)
         return self.spec.score(params, m, meta, self.index.functions)
+
+    def _retrieve_impl(self, params, query_terms, k, doc_block):
+        index = self.index
+        n_docs = index.n_docs
+
+        def score_block(m, docs):
+            # blocks overrun the corpus tail; clip the gather targets
+            # (the driver masks those scores to -inf afterwards)
+            d = docs.clip(0, n_docs - 1)
+            meta = make_qmeta(index, query_terms, d)
+            return self.spec.score(params, m, meta, index.functions)
+
+        return index.retrieve_topk(query_terms, k, score_block,
+                                   doc_block=doc_block,
+                                   impl=self._lookup_impl,
+                                   tile=self._lookup_tile)
+
+    def retrieve(self, query_terms: jnp.ndarray, k: int, *,
+                 doc_block: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """First-stage retrieval: no candidate set — walk the index from
+        the query's posting lists and return the corpus-wide top-k as
+        ``(scores, doc_ids)``, each ``(min(k, n_docs),)``, scores
+        descending, ties toward the lower doc id.
+
+        An all-OOV (or all-padding) query is still well-defined: every M
+        row is zero, so ranking falls back to the retriever's
+        doc-dependent background score (doc_len/seg_len terms) — same as
+        scoring those docs through :meth:`score`.  ``doc_block`` sets
+        the scan's doc-block width (default: whole corpus up to 1024);
+        each distinct (k, doc_block) compiles once.  Mesh-less engines
+        only — the scan's segment scatter has no SPMD lowering yet.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "retrieve() is mesh-less only for now; serve a mesh-less "
+                "engine for first-stage retrieval")
+        if int(k) <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        query_terms = jnp.asarray(query_terms)
+        kk = min(int(k), int(self.index.n_docs))
+        if obs.enabled():
+            self._retrieves_counter.inc()
+            obs.counter("seine_retrieve_docs_scanned_total",
+                        "docs covered by retrieve scans").inc(
+                self.index.n_docs)
+            obs.gauge("seine_retrieve_last_k",
+                      "k of the most recent retrieve").set(kk)
+        return self._retrieve(self.params, query_terms, k=kk,
+                              doc_block=doc_block)
+
+    def flush_lookup_stats(self) -> None:
+        """Run a deferred sampled-stats lookup, if one is staged.
+
+        ``serve_batches``/``serve_retrieval`` call this after recording
+        the request latency so the sampling lookup and its blocking
+        ``int()`` host syncs never land inside the timed span — they
+        used to inflate every ``REPRO_OBS_SAMPLE``-th request's recorded
+        latency (and the p95 at default sampling)."""
+        pending, self._pending_stats = self._pending_stats, None
+        if pending is not None:
+            self._sample_lookup_stats(*pending)
 
     def _place(self, query_terms, doc_ids):
         """Shard candidates over the data axes (fit_spec shrinks/drops axes
@@ -238,7 +327,11 @@ class SeineEngine:
         pairs = obs.counter("seine_lookup_pairs_total",
                             "routed pairs per shard (sampled)")
         if self._t2s_host is not None and valid.size:
-            per = np.bincount(self._t2s_host[valid],
+            # past-vocab terms have no routing-table row (the device
+            # lookup clip-routes them and finds nothing) — indexing the
+            # host table with one used to crash the sampled call
+            in_vocab = valid[valid < self._t2s_host.shape[0]]
+            per = np.bincount(self._t2s_host[in_vocab],
                               minlength=self.index.n_shards)
             for k, c in enumerate(per):
                 if c:
@@ -260,7 +353,12 @@ class SeineEngine:
             if self.mesh is None and (self._n_calls == 1 or
                                       self._n_calls % self._sample_every
                                       == 0):
-                self._sample_lookup_stats(query_terms, doc_ids)
+                if self.defer_lookup_stats:
+                    # stage only — the serve loop flushes after it stops
+                    # the request timer (see flush_lookup_stats)
+                    self._pending_stats = (query_terms, doc_ids)
+                else:
+                    self._sample_lookup_stats(query_terms, doc_ids)
         return self._score(self.params, query_terms, doc_ids)
 
 
@@ -306,6 +404,8 @@ class ServeStats:
     window: int = 1 << 16
     _n: int = 0
     _total_ms: float = 0.0
+    _snap: Optional[np.ndarray] = field(default=None, repr=False)
+    _snap_n: int = -1
 
     def __post_init__(self):
         self.latencies_ms = deque(self.latencies_ms, maxlen=self.window)
@@ -336,10 +436,23 @@ class ServeStats:
     def ms_per_request(self) -> float:
         return self._total_ms / max(self._n, 1)
 
+    def _sorted_ms(self) -> np.ndarray:
+        """Sorted snapshot of the recent-window samples, cached per
+        record() count: a p50+p95 report used to materialise and sort
+        the (up to 64k-sample) deque twice per read — now any number of
+        quantile reads between two records share one O(n log n) sort."""
+        if self._snap is None or self._snap_n != self._n:
+            self._snap = np.sort(np.asarray(self.latencies_ms,
+                                            dtype=np.float64))
+            self._snap_n = self._n
+        return self._snap
+
     def percentile_ms(self, q: float) -> float:
         if not self.latencies_ms:
             return 0.0
-        return float(np.percentile(np.asarray(self.latencies_ms), q))
+        # np.percentile on the pre-sorted snapshot: identical result to
+        # sorting internally (interpolation only indexes ordered values)
+        return float(np.percentile(self._sorted_ms(), q))
 
     @property
     def p50_ms(self) -> float:
@@ -370,38 +483,55 @@ def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
     tiling the data axes and the engine's divisibility guard silently
     replicates it (launch/serve.py rounds ``--batch-pad`` up for you).
     """
+    if batch_pad < 0:
+        raise ValueError(f"batch_pad must be >= 0, got {batch_pad}")
     stats = ServeStats()
     out = []
     real_slots = pad_slots = 0
     req_counter = obs.counter("seine_serve_requests_total",
                               "serve_batches requests")
-    for q, docs in requests:
-        docs = np.asarray(docs)
-        n = docs.shape[0]
-        req_counter.inc()
-        if n == 0:
-            # degenerate request: no candidates to score.  Short-circuit
-            # to an empty result instead of padding (the pad id comes
-            # from docs[0], which does not exist) or paying a device
-            # round-trip for a (0,) batch.
-            obs.counter("seine_serve_degenerate_requests_total",
-                        "empty-candidate requests").inc()
-            out.append(np.zeros((0,), np.float32))
-            continue
-        if batch_pad > 0 and n % batch_pad:
-            m = -(-n // batch_pad) * batch_pad
-            docs = np.concatenate(
-                [docs, np.full(m - n, docs[0], docs.dtype)])
-        real_slots += n
-        pad_slots += docs.shape[0] - n
-        t0 = time.perf_counter()
-        # block on the DEVICE array: np.asarray first would force a blocking
-        # host transfer inside the timed region and double-count conversion
-        with obs.span("serve.request"):
-            s = jax.block_until_ready(engine.score(jnp.asarray(q),
-                                                   jnp.asarray(docs)))
-        stats.record((time.perf_counter() - t0) * 1e3)
-        out.append(np.asarray(s)[:n])
+    # sampled lookup stats cost a device lookup + host syncs; defer them
+    # out of the timed region so they never inflate recorded latency
+    # (see SeineEngine.flush_lookup_stats) — restored on exit so a bare
+    # engine.score() outside a serve loop still samples inline
+    defer = getattr(engine, "flush_lookup_stats", None)
+    prev_defer = getattr(engine, "defer_lookup_stats", False)
+    if defer is not None:
+        engine.defer_lookup_stats = True
+    try:
+        for q, docs in requests:
+            docs = np.asarray(docs)
+            n = docs.shape[0]
+            req_counter.inc()
+            if n == 0:
+                # degenerate request: no candidates to score.
+                # Short-circuit to an empty result instead of padding
+                # (the pad id comes from docs[0], which does not exist)
+                # or paying a device round-trip for a (0,) batch.
+                obs.counter("seine_serve_degenerate_requests_total",
+                            "empty-candidate requests").inc()
+                out.append(np.zeros((0,), np.float32))
+                continue
+            if batch_pad > 0 and n % batch_pad:
+                m = -(-n // batch_pad) * batch_pad
+                docs = np.concatenate(
+                    [docs, np.full(m - n, docs[0], docs.dtype)])
+            real_slots += n
+            pad_slots += docs.shape[0] - n
+            t0 = time.perf_counter()
+            # block on the DEVICE array: np.asarray first would force a
+            # blocking host transfer inside the timed region and
+            # double-count conversion
+            with obs.span("serve.request"):
+                s = jax.block_until_ready(engine.score(jnp.asarray(q),
+                                                       jnp.asarray(docs)))
+            stats.record((time.perf_counter() - t0) * 1e3)
+            if defer is not None:
+                defer()
+            out.append(np.asarray(s)[:n])
+    finally:
+        if defer is not None:
+            engine.defer_lookup_stats = prev_defer
     if obs.enabled() and (real_slots or pad_slots):
         obs.counter("seine_serve_slots_total",
                     "real candidate slots scored").inc(real_slots)
@@ -411,4 +541,29 @@ def serve_batches(engine, requests: Sequence[Tuple[np.ndarray, np.ndarray]],
         obs.gauge("seine_serve_pad_waste_ratio",
                   "pad / (pad + real) slots, most recent call").set(
             pad_slots / (real_slots + pad_slots))
+    return out, stats
+
+
+def serve_retrieval(engine, queries: Sequence[np.ndarray], k: int
+                    ) -> Tuple[List[Tuple[np.ndarray, np.ndarray]],
+                               ServeStats]:
+    """First-stage serving loop: one corpus-wide top-k retrieval per
+    query (no candidate sets — :meth:`SeineEngine.retrieve` walks the
+    index).  Returns ``([(scores, doc_ids), ...], ServeStats)``; latency
+    accounting mirrors :func:`serve_batches` — block on the device
+    result inside the ``serve.retrieve`` span, convert to host arrays
+    after the timer stops.
+    """
+    stats = ServeStats()
+    out = []
+    req_counter = obs.counter("seine_retrieve_requests_total",
+                              "serve_retrieval requests")
+    for q in queries:
+        req_counter.inc()
+        t0 = time.perf_counter()
+        with obs.span("serve.retrieve"):
+            s, d = engine.retrieve(jnp.asarray(q), k)
+            jax.block_until_ready((s, d))
+        stats.record((time.perf_counter() - t0) * 1e3)
+        out.append((np.asarray(s), np.asarray(d)))
     return out, stats

@@ -39,7 +39,9 @@ class TestClassify:
     def test_throughput_metrics_are_higher_better(self, gate):
         for path in ("docs_per_s_streaming",
                      "paths.term_k4.bytes_shrink_vs_replicated",
-                     "throughput_ratio_streaming_vs_legacy"):
+                     "throughput_ratio_streaming_vs_legacy",
+                     "paths.csr.queries_per_s",
+                     "paths.csr.recall_at_10"):
             assert gate.classify(path) == "higher", path
 
     def test_counts_and_configs_are_ignored(self, gate):
@@ -150,7 +152,8 @@ class TestCompare:
 class TestGateCli:
     """End-to-end exit-code contract of the gate script."""
 
-    def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3"):
+    def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3",
+             retrieval="default"):
         import json
         import shutil
         root = tmp_path / "repo"
@@ -159,6 +162,11 @@ class TestGateCli:
                     root / "scripts" / "bench_gate.py")
         if serve is not None:
             (root / "BENCH_serve.json").write_text(json.dumps(serve))
+        if retrieval == "default":
+            retrieval = self.GOOD_RETRIEVAL
+        if retrieval is not None:
+            (root / "BENCH_retrieval.json").write_text(
+                json.dumps(retrieval))
         args = [sys.executable, "scripts/bench_gate.py",
                 "--threshold", threshold]
         if baseline is not None:
@@ -178,11 +186,33 @@ class TestGateCli:
             "per_k": {"2": {"shrink": 1.9, "floor": 1.6, "pass": True}}},
         "paths": {"term_k2": {"lookup_us": {"fused": 90.0}}},
     }
+    GOOD_RETRIEVAL = {
+        "recall_gate": {"metric": "r", "pass": True,
+                        "per_path": {"csr": {"recall": 1.0, "pass": True}}},
+        "paths": {"csr": {"retrieve_us": 1500.0, "queries_per_s": 666.0,
+                          "recall_at_10": 1.0}},
+    }
 
     def test_missing_file_is_distinct_exit_code(self, gate, tmp_path):
         r = self._run(tmp_path, serve=None)
         assert r.returncode == gate.EXIT_MISSING
         assert "missing" in r.stdout
+
+    def test_missing_retrieval_file_is_distinct_exit_code(self, gate,
+                                                          tmp_path):
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, retrieval=None)
+        assert r.returncode == gate.EXIT_MISSING
+        assert "BENCH_retrieval.json" in r.stdout
+
+    def test_recall_gate_failure_exits_one(self, gate, tmp_path):
+        retr = dict(self.GOOD_RETRIEVAL)
+        retr["recall_gate"] = dict(
+            retr["recall_gate"],
+            **{"pass": False,
+               "per_path": {"csr": {"recall": 0.9, "pass": False}}})
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, retrieval=retr)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "recall" in r.stdout
 
     def test_pass_runs_from_any_cwd(self, gate, tmp_path):
         """Paths resolve against the repo root, not the cwd."""
