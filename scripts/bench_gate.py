@@ -22,6 +22,16 @@ A third absolute gate reads BENCH_retrieval.json when present:
                         bitwise against the pair lookup, so anything
                         below 1.0 is a correctness bug, not jitter).
 
+Three more read BENCH_compressed.json (the in-kernel codec claims):
+
+* ``latency_gate``    — fused lookup under each packed codec within
+                        1.1x the uncompressed lookup at every K (padded
+                        by the bench's none-vs-none measured noise
+                        floor; see benchmarks/bench_compressed.py);
+* ``shrink_gate``     — packed-q8 shrinks the posting payload >= 2.5x;
+* ``q8_effectiveness_gate`` — packed retrieval ranking exactly matches
+                        uncompressed; packed-q8 recall@10 >= 0.9.
+
 Metric classification is by key name, applied recursively over each
 JSON's nested dicts (list indices become path segments):
 
@@ -63,7 +73,8 @@ from typing import Iterator, List, Tuple
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = ("BENCH_partitioned.json", "BENCH_serve.json",
-               "BENCH_build.json", "BENCH_retrieval.json")
+               "BENCH_build.json", "BENCH_retrieval.json",
+               "BENCH_compressed.json")
 DEFAULT_THRESHOLD = 1.3
 
 EXIT_PASS, EXIT_FAIL, EXIT_MISSING = 0, 1, 3
@@ -236,6 +247,36 @@ def check_retrieval_gate(retr: dict) -> bool:
     return bool(gate["pass"])
 
 
+def check_compressed_gates(comp: dict) -> bool:
+    """The three absolute gates recorded by benchmarks/bench_compressed:
+    in-kernel decode latency vs the uncompressed lookup, packed-q8
+    posting-payload shrink, and codec effectiveness (packed exact /
+    q8 recall-floored) — the compressed-serving claims."""
+    ok = True
+    for key, render in (
+        ("latency_gate", lambda g: f"ratio={g['ratio']:.3f} "
+                                   f"(ceiling {g['effective_ceiling']:.3f}"
+                                   f" = {g['ceiling']:g}x * noise "
+                                   f"{g['noise_floor']:.3f})"),
+        ("shrink_gate", lambda g: f"shrink={g['shrink']:.2f}x "
+                                  f"(>= {g['floor']:g})"),
+        ("q8_effectiveness_gate",
+         lambda g: f"recall={g['recall']:.3f} "
+                   f"exact={g['exact_ranking']} (floor {g['floor']:g})"),
+    ):
+        gate = comp.get(key)
+        if gate is None:
+            print(f"compressed {key}: MISSING from BENCH_compressed.json")
+            ok = False
+            continue
+        per = " ".join(f"{name}:[{render(g)}]"
+                       for name, g in sorted(gate["per_path"].items()))
+        print(f"compressed {key} [{gate['metric']}]: {per} "
+              f"-> pass={gate['pass']}")
+        ok &= bool(gate["pass"])
+    return ok
+
+
 def print_shard_balance(obs_path: str) -> None:
     """Per-shard balance gauges from the bench run's obs snapshot
     (OBS_bench.json, written by ``benchmarks.run --obs-out``).  Purely
@@ -321,6 +362,19 @@ def main(argv=None) -> int:
             ok &= check_retrieval_gate(json.load(f))
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read {retr_path}: {e} "
+              f"(exit code {EXIT_MISSING})")
+        return EXIT_MISSING
+
+    comp_path = os.path.join(REPO_ROOT, "BENCH_compressed.json")
+    if not os.path.exists(comp_path):
+        print(f"bench gate: {comp_path} is missing — did the compressed "
+              f"suite run? (exit code {EXIT_MISSING}, not a regression)")
+        return EXIT_MISSING
+    try:
+        with open(comp_path) as f:
+            ok &= check_compressed_gates(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {comp_path}: {e} "
               f"(exit code {EXIT_MISSING})")
         return EXIT_MISSING
     print_shard_balance(args.obs_snapshot)

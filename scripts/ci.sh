@@ -14,14 +14,17 @@
 #   scripts/ci.sh bench     perf lanes + the regression gate.  Runs the
 #                           dist-substrate, partitioned-serving (fused vs
 #                           jnp grid + the Zipfian sub-shard corpus),
-#                           legacy-vs-streaming build and first-stage
-#                           retrieval benchmarks, emitting
-#                           BENCH_partitioned.json, BENCH_serve.json,
-#                           BENCH_build.json and BENCH_retrieval.json;
-#                           then scripts/bench_gate.py (1) re-checks the
+#                           legacy-vs-streaming build, first-stage
+#                           retrieval and compressed-codec benchmarks,
+#                           emitting BENCH_partitioned.json,
+#                           BENCH_serve.json, BENCH_build.json,
+#                           BENCH_retrieval.json and
+#                           BENCH_compressed.json; then
+#                           scripts/bench_gate.py (1) re-checks the
 #                           absolute gates (fused K=2 lookup <=
 #                           replicated jnp; zipf bytes_shrink >= 0.8*K;
-#                           retrieval recall@10 == 1.0 on every path),
+#                           retrieval recall@10 == 1.0 on every path;
+#                           codec latency/shrink/effectiveness),
 #                           and (2) compares EVERY BENCH_*.json metric
 #                           against the committed baseline (snapshotted
 #                           from HEAD before the run), failing on >1.3x
@@ -58,7 +61,8 @@ case "${1:-full}" in
   bench) baseline_dir=$(mktemp -d)
          trap 'rm -rf "$baseline_dir"' EXIT
          for f in BENCH_partitioned.json BENCH_serve.json \
-                  BENCH_build.json BENCH_retrieval.json; do
+                  BENCH_build.json BENCH_retrieval.json \
+                  BENCH_compressed.json; do
            git show "HEAD:$f" > "$baseline_dir/$f" 2>/dev/null || \
              rm -f "$baseline_dir/$f"
          done
@@ -66,7 +70,7 @@ case "${1:-full}" in
          # balance, build counters, span timings) — uploaded next to the
          # BENCH_*.json artifacts; bench_gate prints its balance gauges
          python -m benchmarks.run \
-           --only dist,partitioned,index_build,retrieval \
+           --only dist,partitioned,index_build,retrieval,compressed \
            --obs-out OBS_bench.json
          # no exec: the EXIT trap must still fire to clean the snapshot
          python scripts/bench_gate.py --baseline-dir "$baseline_dir"

@@ -182,9 +182,19 @@ def save_index(index_dir: str, index: Any, *,
             a = getattr(index, name)
             if a is not None:
                 common[name] = a
-        shard = lambda k: {"term_offsets": index.term_offsets[k],
-                           "doc_ids": index.doc_ids[k],
-                           "values": index.values[k]}
+        # posting payload per codec: raw arrays for "none", the packed
+        # sidecars otherwise (fences are NOT stored — load_index rebuilds
+        # them from the packed metadata / raw ids)
+        posting = {"doc_ids": index.doc_ids, "values": index.values,
+                   "packed_words": index.packed_words,
+                   "tile_bits": index.tile_bits,
+                   "tile_base": index.tile_base,
+                   "tile_word_off": index.tile_word_off,
+                   "values_q": index.values_q,
+                   "value_scale": index.value_scale}
+        shard = lambda k: dict(
+            {"term_offsets": index.term_offsets[k]},
+            **{n: a[k] for n, a in posting.items() if a is not None})
     elif isinstance(index, SegmentInvertedIndex):
         kind, n_shards = "segment", 1
         common = {}
@@ -201,6 +211,11 @@ def save_index(index_dir: str, index: Any, *,
         "n_b": int(index.n_b), "functions": list(index.functions),
         "time": time.time(),
     }
+    codec = getattr(index, "codec", "none")
+    if codec != "none":
+        manifest.update(codec=codec, codec_tile=int(index.codec_tile),
+                        max_tile_words=int(index.max_tile_words),
+                        codec_spans=[int(s) for s in index.codec_spans])
     # device->host gather on the caller thread (mirrors save_checkpoint:
     # the background thread only ever does file I/O + the publish swap)
     shard_arrays = [{n: np.asarray(a) for n, a in shard(k).items()}
@@ -303,22 +318,47 @@ def load_index(index_dir: str) -> Any:
             doc_len=jnp.asarray(common["doc_len"]),
             seg_len=jnp.asarray(common["seg_len"]), **static)
     shards = [load_index_shard(index_dir, k) for k in range(m["n_shards"])]
-    doc_ids = jnp.asarray(np.stack([s["doc_ids"] for s in shards]))
     opt = lambda n: (jnp.asarray(common[n]) if n in common else None)
+    stack = lambda n: (jnp.asarray(np.stack([s[n] for s in shards]))
+                       if n in shards[0] else None)
+    codec = m.get("codec", "none")     # legacy manifests: uncompressed
+    if codec == "none":
+        doc_ids = stack("doc_ids")
+        posting = dict(doc_ids=doc_ids, values=stack("values"),
+                       fences=build_fences(doc_ids))
+    else:
+        # packed shards: ids/values stay in their compressed form; the
+        # fence rows are not stored — decode them from the tile metadata
+        # (bitwise what build_fences produced on the raw ids)
+        from ..core.codec import fences_from_packed
+        posting = dict(
+            codec=codec, codec_tile=int(m["codec_tile"]),
+            max_tile_words=int(m["max_tile_words"]),
+            codec_spans=tuple(m.get("codec_spans", (0, 0))),
+            doc_ids=None, values=stack("values"),
+            packed_words=stack("packed_words"),
+            tile_bits=stack("tile_bits"), tile_base=stack("tile_base"),
+            tile_word_off=stack("tile_word_off"),
+            values_q=stack("values_q"), value_scale=stack("value_scale"))
+        nmax = (posting["values"] if posting["values"] is not None
+                else posting["values_q"]).shape[1]
+        posting["fences"] = jnp.asarray(fences_from_packed(
+            np.stack([s["tile_bits"] for s in shards]),
+            np.stack([s["tile_base"] for s in shards]),
+            np.stack([s["tile_word_off"] for s in shards]),
+            np.stack([s["packed_words"] for s in shards]),
+            tile=int(m["codec_tile"]), n=int(nmax)))
     return PartitionedIndex(
         term_offsets=jnp.asarray(
             np.stack([s["term_offsets"] for s in shards])),
-        doc_ids=doc_ids,
-        values=jnp.asarray(np.stack([s["values"] for s in shards])),
         term_to_shard=jnp.asarray(common["term_to_shard"]),
         range_lo=jnp.asarray(common["range_lo"]),
         idf=jnp.asarray(common["idf"]),
         doc_len=jnp.asarray(common["doc_len"]),
         seg_len=jnp.asarray(common["seg_len"]),
-        fences=build_fences(doc_ids),
         range_hi=opt("range_hi"),
         split_term=opt("split_term"), split_doc=opt("split_doc"),
-        n_shards=m["n_shards"], **static)
+        n_shards=m["n_shards"], **static, **posting)
 
 
 def restore_checkpoint(ckpt_dir: str, target: Any, *,

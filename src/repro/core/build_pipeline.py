@@ -412,13 +412,17 @@ class BuildPipeline:
                           k: int, *, batch_size: int = 32,
                           max_uniq: Optional[int] = None,
                           spill_dir: Optional[str] = None,
-                          verbose: bool = False, mesh=None):
+                          verbose: bool = False, mesh=None,
+                          codec: str = "none",
+                          codec_tile: Optional[int] = None):
         """Shard-native build: runs -> K term-range shards, directly.
 
         Returns ``(PartitionedIndex, BuildStats)``; the global
         doc_ids/values CSR is never materialised on the host — each shard
         is assembled independently from the runs and its term range (the
-        per-pod unit of work at production scale).
+        per-pod unit of work at production scale).  ``codec`` packs the
+        posting payload at merge time (``core.codec``): the raw stacked
+        doc_ids exist only transiently inside stage 4.
         """
         from ..dist.partition import partitioned_from_runs
 
@@ -434,5 +438,6 @@ class BuildPipeline:
                 spiller.runs, k, idf=self.vocab.idf, doc_len=doc_len,
                 seg_len=seg_len, n_docs=tokens.shape[0],
                 vocab_size=self.vocab.size, n_b=self.cfg.n_segments,
-                functions=self.functions, mesh=mesh)
+                functions=self.functions, mesh=mesh, codec=codec,
+                codec_tile=codec_tile)
         return pidx, stats

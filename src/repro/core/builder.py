@@ -106,13 +106,17 @@ class IndexBuilder:
                           k: int, *, batch_size: int = 32,
                           max_uniq: Optional[int] = None,
                           spill_dir: Optional[str] = None,
-                          verbose: bool = False, mesh=None):
+                          verbose: bool = False, mesh=None,
+                          codec: str = "none",
+                          codec_tile: Optional[int] = None):
         """Shard-native build: K term-range shards straight from the
         streamed runs — the global doc_ids/values CSR is never
-        materialised on this host.  Returns a PartitionedIndex."""
+        materialised on this host.  Returns a PartitionedIndex;
+        ``codec`` packs the posting payload at merge time."""
         pidx, stats = self._pipeline().build_partitioned(
             tokens, seg_ids, k, batch_size=batch_size, max_uniq=max_uniq,
-            spill_dir=spill_dir, verbose=verbose, mesh=mesh)
+            spill_dir=spill_dir, verbose=verbose, mesh=mesh, codec=codec,
+            codec_tile=codec_tile)
         self.last_build_stats = stats
         return pidx
 

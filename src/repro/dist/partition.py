@@ -58,10 +58,25 @@ from ..core.index import csr_lookup_positions, merge_run_parts
 @jax.tree_util.register_dataclass
 @dataclass
 class PartitionedIndex:
-    """K term-range shards of a SegmentInvertedIndex, stacked on axis 0."""
+    """K term-range shards of a SegmentInvertedIndex, stacked on axis 0.
+
+    With ``codec="none"`` the posting payload is the raw layout below.
+    With a packed codec (``core.codec``) the raw ``doc_ids`` row is
+    replaced by the tile-compressed quadruple ``packed_words`` /
+    ``tile_bits`` / ``tile_base`` / ``tile_word_off`` (``doc_ids`` is
+    None — nbytes and the per-device projections therefore account for
+    the packed buffers by construction, never a reconstructed unpacked
+    view), and under ``"packed-q8"`` the f32 ``values`` additionally
+    give way to int8 ``values_q`` + per-(shard, local term) ``value_scale``.
+    Ids decode losslessly so every lookup/retrieve path stays
+    bitwise-equal to the uncompressed index; only q8 values are
+    approximate (gated on effectiveness, benchmarks/bench_compressed.py).
+    """
     term_offsets: jnp.ndarray   # (K, Vmax+1) int32, shard-local CSR offsets
-    doc_ids: jnp.ndarray        # (K, Nmax) int32, padded with n_docs
-    values: jnp.ndarray         # (K, Nmax, n_b, n_f) float32, zero-padded
+    doc_ids: Optional[jnp.ndarray]  # (K, Nmax) int32 padded with n_docs;
+    #                             None under a packed codec
+    values: Optional[jnp.ndarray]   # (K, Nmax, n_b, n_f) f32 zero-padded;
+    #                             None under codec "packed-q8"
     term_to_shard: jnp.ndarray  # (|v|,) int32 routing table (replicated)
     range_lo: jnp.ndarray       # (K,) int32 first global term of each shard
     idf: jnp.ndarray            # (|v|,)
@@ -75,7 +90,9 @@ class PartitionedIndex:
         metadata=dict(static=True), default=())
     # (K, ceil(Nmax/POSTING_TILE)) int32 — per-shard fence rows for the
     # kernel's two-level bisect (built at merge time; None on legacy
-    # checkpoints -> derived on the fly by the lookup op)
+    # checkpoints -> derived on the fly by the lookup op).  Packed codecs
+    # keep fences RAW — they are the tile anchors the decode resolves
+    # against — and always carry them.
     fences: Optional[jnp.ndarray] = None
     # (K,) int32 — last global term (inclusive) with postings in shard k.
     # Without doc-range sub-shards this is just the next range_lo minus
@@ -89,16 +106,76 @@ class PartitionedIndex:
     # is per term and the kernel keeps its (Q,)-stream fast path.
     split_term: Optional[jnp.ndarray] = None
     split_doc: Optional[jnp.ndarray] = None
+    # -- codec axis (core.codec tile-compressed postings) -------------------
+    codec: str = dataclasses.field(metadata=dict(static=True),
+                                   default="none")
+    codec_tile: int = dataclasses.field(metadata=dict(static=True),
+                                        default=0)
+    max_tile_words: int = dataclasses.field(metadata=dict(static=True),
+                                            default=0)
+    # pack-time loop-bound hint for the CPU two-level bisect: (max tiles
+    # any term's routed range spans, max posting-list length).  (0, 0) =
+    # unknown (legacy checkpoints) -> worst-case iteration counts.
+    codec_spans: Tuple[int, int] = dataclasses.field(
+        metadata=dict(static=True), default=(0, 0))
+    packed_words: Optional[jnp.ndarray] = None   # (K, W) int32
+    tile_bits: Optional[jnp.ndarray] = None      # (K, F) int32 in {0,4,8,16,32}
+    tile_base: Optional[jnp.ndarray] = None      # (K, F) int32 FOR bases
+    tile_word_off: Optional[jnp.ndarray] = None  # (K, F+1) int32 prefix sums
+    values_q: Optional[jnp.ndarray] = None       # (K, Nmax, n_b, n_f) int8
+    value_scale: Optional[jnp.ndarray] = None    # (K, Vmax) f32 per-term
 
     @property
     def nnz(self) -> int:
         """True stored pairs (padding excluded)."""
         return int(np.asarray(self.term_offsets[:, -1]).sum())
 
+    @property
+    def nmax(self) -> int:
+        """Padded postings per shard row (the stacked layout's width)."""
+        a = self.values if self.values is not None else self.values_q
+        return int(a.shape[1])
+
+    def _packed(self):
+        """The codec quadruple in the order the kernels take it."""
+        return (self.packed_words, self.tile_bits, self.tile_base,
+                self.tile_word_off)
+
+    @property
+    def _serve_values(self):
+        """The values array lookups read: f32, or int8 under q8 (the
+        kernels dequantise against ``value_scale`` on the fly)."""
+        return self.values_q if self.codec == "packed-q8" else self.values
+
+    def _check_lookup_impl(self, impl):
+        if self.codec != "none" and impl == "jnp":
+            raise ValueError(
+                f"impl='jnp' (the mesh partial-sum expression) does not "
+                f"support codec {self.codec!r}: packed postings have no "
+                "XLA-partitionable per-shard bisect; serve packed indexes "
+                "with the fused lookup, or build with codec='none' for "
+                "mesh placement")
+
     def _sharded_arrays(self):
         """Arrays stacked on the leading K axis (split over devices)."""
         return tuple(a for a in (self.term_offsets, self.doc_ids,
-                                 self.values, self.fences) if a is not None)
+                                 self.values, self.fences,
+                                 self.packed_words, self.tile_bits,
+                                 self.tile_base, self.tile_word_off,
+                                 self.values_q, self.value_scale)
+                     if a is not None)
+
+    @property
+    def posting_nbytes(self) -> int:
+        """Bytes of the per-posting payload only — ids (raw or packed,
+        codec sidecars included) + values (+ scales) — the denominator
+        ``codec_shrink`` is defined on; fences and replicated stats are
+        common to both codecs and excluded."""
+        arrs = (self.doc_ids, self.values, self.packed_words,
+                self.tile_bits, self.tile_base, self.tile_word_off,
+                self.values_q, self.value_scale)
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in arrs if a is not None)
 
     def _replicated_arrays(self):
         """O(|v|) / O(n_docs) / O(K) leftovers every device holds."""
@@ -172,7 +249,16 @@ class PartitionedIndex:
         if impl not in (None, "fused", "jnp"):
             raise ValueError(f"unknown lookup impl {impl!r}; supported: "
                              "'fused', 'jnp'")
+        self._check_lookup_impl(impl)
         if impl != "jnp":
+            if self.codec != "none":
+                from ..kernels.csr_lookup.ref import lookup_pairs_packed_ref
+                return lookup_pairs_packed_ref(
+                    self.term_offsets, self._packed(), self.fences,
+                    self._serve_values, self.value_scale,
+                    self.term_to_shard, self.range_lo, term_ids, doc_ids,
+                    self.split_term, self.split_doc, tile=self.codec_tile,
+                    spans=self.codec_spans)
             from ..kernels.csr_lookup import lookup_pairs_ref
             return lookup_pairs_ref(
                 self.term_offsets, self.doc_ids, self.values,
@@ -219,17 +305,25 @@ class PartitionedIndex:
         if impl not in (None, "fused", "jnp", "interpret"):
             raise ValueError(f"unknown lookup impl {impl!r}; supported: "
                              "'fused', 'jnp', 'interpret'")
+        self._check_lookup_impl(impl)
         if impl == "jnp":
             q = jnp.broadcast_to(query_terms[None],
                                  (doc_ids.shape[0],) + query_terms.shape)
             return self.lookup_pairs(q, doc_ids, impl="jnp")
+        self._check_codec_tile(tile)
         from ..kernels.csr_lookup import csr_lookup
         return csr_lookup(
-            self.term_offsets, self.doc_ids, self.values,
+            self.term_offsets, self.doc_ids, self._serve_values,
             self.term_to_shard, self.range_lo, query_terms, doc_ids,
             fences=self.fences, split_term=self.split_term,
-            split_doc=self.split_doc, tile=tile,
-            interpret=True if impl == "interpret" else None)
+            split_doc=self.split_doc,
+            tile=self.codec_tile if self.codec != "none" else tile,
+            interpret=True if impl == "interpret" else None,
+            codec=self.codec,
+            packed=self._packed() if self.codec != "none" else None,
+            value_scale=self.value_scale,
+            max_tile_words=self.max_tile_words,
+            codec_spans=self.codec_spans)
 
     def retrieve_topk(self, query_terms: jnp.ndarray, k: int,
                       score_block_fn, *, doc_block: Optional[int] = None,
@@ -247,12 +341,145 @@ class PartitionedIndex:
         stays an exclusive segment scatter — no per-pair ``route_pairs``
         needed on the scan path.
         """
+        self._check_codec_tile(tile)
         from ..kernels.csr_lookup import csr_retrieve_topk
         return csr_retrieve_topk(
-            self.term_offsets, self.doc_ids, self.values,
+            self.term_offsets, self.doc_ids, self._serve_values,
             self.term_to_shard, self.range_lo, self.range_hi, query_terms,
             n_docs=self.n_docs, k=k, score_block_fn=score_block_fn,
-            doc_block=doc_block, tile=tile, impl=impl)
+            doc_block=doc_block,
+            tile=self.codec_tile if self.codec != "none" else tile,
+            impl=impl, codec=self.codec,
+            packed=self._packed() if self.codec != "none" else None,
+            value_scale=self.value_scale,
+            max_tile_words=self.max_tile_words,
+            codec_spans=self.codec_spans, fences=self.fences)
+
+    def _check_codec_tile(self, tile):
+        """Satellite guard: a packed layout bakes its tile width into the
+        word offsets and fence spacing — an overriding ``tile`` cannot be
+        honoured, so reject it up front instead of DMA'ing wrong offsets
+        deep in the kernel."""
+        if (self.codec != "none" and tile is not None
+                and int(tile) != self.codec_tile):
+            raise ValueError(
+                f"lookup tile {tile} does not match this index's packed "
+                f"codec tile {self.codec_tile}; packed indexes serve only "
+                "at their build-time tile (rebuild with codec='none' to "
+                "sweep tile widths)")
+
+
+# ---------------------------------------------------------------------------
+# codec application (core.codec tile-compressed postings)
+# ---------------------------------------------------------------------------
+
+def _codec_arrays(codec: str, tile: int, doc_ids: np.ndarray,
+                  values, term_offsets):
+    """Pack host-side posting arrays for ``codec`` and emit the codec
+    telemetry (per-tile bit-width histogram + bytes-saved gauges).
+    Returns the dict of constructor overrides."""
+    from ..core import codec as codec_mod
+
+    p = codec_mod.pack_doc_ids(np.asarray(doc_ids, np.int32), tile)
+    offs = np.asarray(term_offsets, np.int64)
+    lo, hi = offs[:, :-1], offs[:, 1:]
+    live = hi > lo
+    # loop-bound hint: the widest routed range, in tiles and in postings
+    # (extra bisect iterations are no-ops, so ceilings are all it needs)
+    span = int(np.where(live, (hi - 1) // tile - lo // tile + 1, 1)
+               .max(initial=1))
+    max_len = int((hi - lo).max(initial=1))
+    out = dict(
+        codec=codec, codec_tile=int(tile),
+        max_tile_words=int(p.max_tile_words),
+        codec_spans=(span, max_len),
+        doc_ids=None,
+        packed_words=jnp.asarray(p.packed_words),
+        tile_bits=jnp.asarray(p.tile_bits),
+        tile_base=jnp.asarray(p.tile_base),
+        tile_word_off=jnp.asarray(p.tile_word_off))
+    raw_bytes = int(np.prod(doc_ids.shape)) * 4
+    packed_bytes = p.nbytes
+    if codec == "packed-q8":
+        q, scale = codec_mod.quantize_values(np.asarray(values, np.float32),
+                                             np.asarray(term_offsets))
+        out.update(values=None, values_q=jnp.asarray(q),
+                   value_scale=jnp.asarray(scale))
+        raw_bytes += int(np.prod(values.shape)) * 4
+        packed_bytes += q.nbytes + scale.nbytes
+    bits_hist = obs.gauge("seine_codec_tile_bits_total",
+                          "posting tiles per packed bit width")
+    bits_hist.clear()
+    widths, counts = np.unique(p.tile_bits, return_counts=True)
+    for w, c in zip(widths, counts):
+        bits_hist.set(int(c), bits=str(int(w)))
+    obs.gauge("seine_codec_bytes_saved",
+              "posting bytes removed by the codec").set(
+        max(raw_bytes - packed_bytes, 0))
+    obs.gauge("seine_codec_shrink",
+              "raw / packed posting payload bytes").set(
+        raw_bytes / max(packed_bytes, 1))
+    return out
+
+
+def pack_index(pidx: PartitionedIndex, codec: str,
+               tile: Optional[int] = None) -> PartitionedIndex:
+    """Re-encode an uncompressed PartitionedIndex under ``codec``.
+
+    The tile defaults to the build-time ``POSTING_TILE`` (the spacing of
+    the stored fence rows); a different ``tile`` also rebuilds the
+    fences so anchors and packed tiles stay aligned.  Ids round-trip
+    bitwise; q8 values quantise per (shard, local term).
+    """
+    from ..core.codec import validate_codec
+    from ..core.index import POSTING_TILE, build_fences
+
+    codec = validate_codec(codec)
+    if pidx.codec != "none":
+        raise ValueError(f"index is already packed ({pidx.codec!r}); "
+                         "unpack_index first to re-encode")
+    if codec == "none":
+        return pidx
+    t = int(tile or POSTING_TILE)
+    doc_ids = np.asarray(pidx.doc_ids)
+    values = np.asarray(pidx.values)
+    over = _codec_arrays(codec, t, doc_ids, values,
+                         np.asarray(pidx.term_offsets))
+    over["fences"] = jnp.asarray(build_fences(doc_ids, t))
+    return dataclasses.replace(pidx, **over)
+
+
+def unpack_index(pidx: PartitionedIndex) -> PartitionedIndex:
+    """Materialise the raw layout back from a packed index: ids decode
+    bitwise; q8 values dequantise (approximate by design — the scales
+    are kept, the pre-quantisation floats are gone)."""
+    from ..core import codec as codec_mod
+
+    if pidx.codec == "none":
+        return pidx
+    p = codec_mod.PackedIds(
+        np.asarray(pidx.packed_words), np.asarray(pidx.tile_bits),
+        np.asarray(pidx.tile_base), np.asarray(pidx.tile_word_off),
+        pidx.max_tile_words, pidx.codec_tile, pidx.nmax)
+    doc_ids = codec_mod.unpack_doc_ids(p)
+    values = pidx.values
+    if pidx.codec == "packed-q8":
+        offs = np.asarray(pidx.term_offsets, np.int64)
+        nmax = pidx.nmax
+        scale = np.asarray(pidx.value_scale)
+        pos_scale = np.ones((pidx.n_shards, nmax), np.float32)
+        for i in range(pidx.n_shards):
+            counts = np.diff(np.clip(offs[i], 0, nmax))
+            term_of = np.repeat(np.arange(offs.shape[1] - 1), counts)
+            pos_scale[i, :term_of.shape[0]] = scale[i][term_of]
+        values = jnp.asarray(np.asarray(pidx.values_q, np.float32)
+                             * pos_scale[..., None, None])
+    return dataclasses.replace(
+        pidx, codec="none", codec_tile=0, max_tile_words=0,
+        codec_spans=(0, 0),
+        doc_ids=jnp.asarray(doc_ids), values=values, packed_words=None,
+        tile_bits=None, tile_base=None, tile_word_off=None,
+        values_q=None, value_scale=None)
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +503,9 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
                           doc_len: np.ndarray, seg_len: np.ndarray,
                           n_docs: int, vocab_size: int, n_b: int,
                           functions: Tuple[str, ...],
-                          mesh=None, split_hot: bool = True
+                          mesh=None, split_hot: bool = True,
+                          codec: str = "none",
+                          codec_tile: Optional[int] = None
                           ) -> "PartitionedIndex":
     """Assemble a K-shard PartitionedIndex directly from term-sorted runs.
 
@@ -295,10 +524,17 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
     itself is now a compatibility wrapper over this merger, so both paths
     produce bitwise-identical shards.
     """
-    from ..core.index import build_fences
+    from ..core.codec import validate_codec
+    from ..core.index import POSTING_TILE, build_fences
     from .sharding import (plan_posting_ranges, plan_term_ranges,
                            shard_partitioned_index)
 
+    codec = validate_codec(codec)
+    if codec != "none" and mesh is not None:
+        raise ValueError(
+            "codec != 'none' cannot be combined with a mesh: packed "
+            "posting buffers have no partial-sum mesh lowering (pack "
+            "after gathering, or serve the mesh index uncompressed)")
     counts = merged_term_counts(runs, vocab_size)
     # guard (shared by every build path, incl. shard-native): K beyond the
     # populated term ranges would mint zero-nnz shards whose padding still
@@ -457,10 +693,16 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
                               np.diff(table_bnd))
     any_split = bool((split_term >= 0).any())
 
+    t = int(codec_tile or POSTING_TILE)
+    over = dict(doc_ids=jnp.asarray(doc_ids), values=jnp.asarray(values),
+                fences=jnp.asarray(build_fences(doc_ids)))
+    if codec != "none":
+        # pack BEFORE handing arrays to jax; the raw ids exist only
+        # transiently here.  Fences must anchor at the codec tile so the
+        # two-level bisect and the packed tiles stay aligned.
+        over.update(_codec_arrays(codec, t, doc_ids, values, term_offsets))
+        over["fences"] = jnp.asarray(build_fences(doc_ids, t))
     pidx = PartitionedIndex(
-        term_offsets=jnp.asarray(term_offsets),
-        doc_ids=jnp.asarray(doc_ids),
-        values=jnp.asarray(values),
         term_to_shard=jnp.asarray(term_to_shard),
         range_lo=jnp.asarray(t_first.astype(np.int32)),
         idf=jnp.asarray(np.asarray(idf).astype(np.float32)),
@@ -468,10 +710,11 @@ def partitioned_from_runs(runs: Sequence, k: int, *, idf: np.ndarray,
         seg_len=jnp.asarray(np.asarray(seg_len).astype(np.float32)),
         n_docs=int(n_docs), vocab_size=int(vocab_size), n_b=int(n_b),
         n_shards=int(k), functions=tuple(functions),
-        fences=jnp.asarray(build_fences(doc_ids)),
+        term_offsets=jnp.asarray(term_offsets),
         range_hi=jnp.asarray(t_last.astype(np.int32)),
         split_term=jnp.asarray(split_term) if any_split else None,
-        split_doc=jnp.asarray(split_doc) if any_split else None)
+        split_doc=jnp.asarray(split_doc) if any_split else None,
+        **over)
     if mesh is not None:
         pidx = shard_partitioned_index(pidx, mesh)
     return pidx

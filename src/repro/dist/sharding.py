@@ -317,7 +317,8 @@ def plan_posting_ranges(term_offsets, k: int):
 
 
 def partition_index(index, k: int, *, mesh: Mesh = None,
-                    split_hot: bool = True):
+                    split_hot: bool = True, codec: str = "none",
+                    codec_tile: int = None):
     """Split a built SegmentInvertedIndex into a K-shard PartitionedIndex.
 
     COMPATIBILITY PATH over the streaming merger: the global CSR is viewed
@@ -357,7 +358,8 @@ def partition_index(index, k: int, *, mesh: Mesh = None,
         doc_len=np.asarray(index.doc_len),
         seg_len=np.asarray(index.seg_len), n_docs=index.n_docs,
         vocab_size=index.vocab_size, n_b=index.n_b,
-        functions=index.functions, mesh=mesh, split_hot=split_hot)
+        functions=index.functions, mesh=mesh, split_hot=split_hot,
+        codec=codec, codec_tile=codec_tile)
 
 
 def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:
@@ -371,16 +373,24 @@ def partitioned_index_shardings(mesh: Mesh, pidx) -> Any:
     shard0 = lambda a: NamedSharding(
         mesh, fit_spec(mesh, P("model"), (a.shape[0],)))
     opt = lambda a, sh: None if a is None else sh
+    sh0 = lambda a: None if a is None else shard0(a)
     return PartitionedIndex(
         term_offsets=shard0(pidx.term_offsets),
-        doc_ids=shard0(pidx.doc_ids), values=shard0(pidx.values),
+        doc_ids=sh0(pidx.doc_ids), values=sh0(pidx.values),
         term_to_shard=rep, range_lo=rep, idf=rep, doc_len=rep, seg_len=rep,
         n_docs=pidx.n_docs, vocab_size=pidx.vocab_size, n_b=pidx.n_b,
         n_shards=pidx.n_shards, functions=pidx.functions,
-        fences=None if pidx.fences is None else shard0(pidx.fences),
+        fences=sh0(pidx.fences),
         range_hi=opt(pidx.range_hi, rep),
         split_term=opt(pidx.split_term, rep),
-        split_doc=opt(pidx.split_doc, rep))
+        split_doc=opt(pidx.split_doc, rep),
+        codec=pidx.codec, codec_tile=pidx.codec_tile,
+        max_tile_words=pidx.max_tile_words,
+        codec_spans=pidx.codec_spans,
+        packed_words=sh0(pidx.packed_words),
+        tile_bits=sh0(pidx.tile_bits), tile_base=sh0(pidx.tile_base),
+        tile_word_off=sh0(pidx.tile_word_off),
+        values_q=sh0(pidx.values_q), value_scale=sh0(pidx.value_scale))
 
 
 def shard_partitioned_index(pidx, mesh: Mesh):

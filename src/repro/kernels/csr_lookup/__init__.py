@@ -1,9 +1,11 @@
-from .ops import (csr_lookup, csr_lookup_ref, csr_retrieve_block,
-                  csr_retrieve_topk, lookup_pairs_ref, merge_windows,
+from .ops import (csr_lookup, csr_lookup_packed_ref, csr_lookup_ref,
+                  csr_retrieve_block, csr_retrieve_topk, lookup_pairs_ref,
+                  merge_windows, packed_bisect, retrieve_block_packed_ref,
                   retrieve_block_ref, retrieve_lanes, route_pairs,
                   route_terms)
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "csr_retrieve_block",
-           "csr_retrieve_topk", "lookup_pairs_ref", "merge_windows",
+__all__ = ["csr_lookup", "csr_lookup_packed_ref", "csr_lookup_ref",
+           "csr_retrieve_block", "csr_retrieve_topk", "lookup_pairs_ref",
+           "merge_windows", "packed_bisect", "retrieve_block_packed_ref",
            "retrieve_block_ref", "retrieve_lanes", "route_pairs",
            "route_terms"]

@@ -256,3 +256,240 @@ def csr_lookup_pallas(shard: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
         interpret=interpret,
     )(shard, lo, hi, doc_targets[None].astype(jnp.int32), fences, doc_ids,
       values)
+
+
+# ---------------------------------------------------------------------------
+# packed-codec kernels: decode between the tile DMA and the in-tile bisect
+# ---------------------------------------------------------------------------
+
+def _make_packed_kernel(tile: int, n_fence_iter: int, n_tile_iter: int,
+                        pair_routed: bool, mw: int, quantized: bool):
+    """The serving lookup over tile-compressed postings.
+
+    Identical control flow to ``_make_kernel`` — fence bisect, one tile
+    DMA, in-tile bisect, values DMA — except the tile DMA moves
+    ``max_tile_words`` packed int32 words (<= tile/8 of the raw bytes at
+    4-bit width) and every probe decodes its element between the DMA'd
+    buffer and the comparison: one word load + logical shift + mask
+    against the tile's frame-of-reference base.  Width classes divide 32,
+    so no element straddles words and the decode is two scalar VMEM
+    reads — the same op class as the uncompressed probe.  The fence row
+    stays raw, anchoring each tile exactly as before, which is what
+    keeps the two-level split (and therefore the results) bitwise-equal
+    to the uncompressed kernel.  ``quantized`` adds an int8 values row
+    DMA dequantised by the pair's per-term scale (routed outside, one
+    (1, 1) VMEM block per cell).
+    """
+    def _kernel(shard_ref, lo_ref, hi_ref, docs_ref, fence_ref, bits_ref,
+                tbase_ref, woff_ref, scale_ref, packed_ref, vals_ref,
+                out_ref, pw_buf, buf, sem_t, sem_v):
+        i = pl.program_id(0)                 # query term
+        if pair_routed:                      # owner depends on the doc too
+            j = pl.program_id(1)
+            k, lo0, hi0 = shard_ref[i, j], lo_ref[i, j], hi_ref[i, j]
+        else:
+            k, lo0, hi0 = shard_ref[i], lo_ref[i], hi_ref[i]
+        d = docs_ref[0, 0]                   # candidate doc id
+        n_fence = fence_ref.shape[1]
+
+        j_lo = lo0 // tile
+        j_hi = jnp.maximum((hi0 - 1) // tile, j_lo)
+
+        def fence_body(_, state):
+            flo, fhi = state
+            mid = (flo + fhi) // 2
+            v = fence_ref[0, jnp.clip(mid, 0, n_fence - 1)]
+            go_right = (v < d) & (flo < fhi)
+            return (jnp.where(go_right, mid + 1, flo),
+                    jnp.where(go_right, fhi, mid))
+
+        jf, _ = jax.lax.fori_loop(0, n_fence_iter, fence_body,
+                                  (j_lo + 1, j_hi + 1))
+        jt = jnp.clip(jf - 1, 0, n_fence - 1)
+        base = jt * tile
+
+        # the winning tile's codec metadata (VMEM-resident rows, index-
+        # mapped by owner exactly like the fence row) + its packed words
+        c = bits_ref[0, jt]
+        tb = tbase_ref[0, jt]
+        wo = woff_ref[0, jt]
+        mask = (1 << jnp.minimum(c, 16)) - 1
+        cp = pltpu.make_async_copy(
+            packed_ref.at[pl.ds(k, 1), pl.ds(wo, mw)], pw_buf, sem_t)
+        cp.start()
+        cp.wait()
+
+        def dec(p):
+            # decode absolute position p of tile jt from the DMA'd words
+            r = jnp.clip(p - base, 0, tile - 1)
+            bp = r * c
+            wv = pw_buf[0, jnp.clip(bp // 32, 0, mw - 1)]
+            rel = jax.lax.shift_right_logical(
+                wv, jnp.bitwise_and(bp, 31)) & mask
+            return jnp.where(c == 32, wv, tb + rel)
+
+        w_lo = jnp.maximum(base, lo0)
+        w_hi = jnp.minimum(base + tile, hi0)
+
+        def tile_body(_, state):
+            lo, hi = state
+            mid = (lo + hi) // 2
+            go_right = (dec(mid) < d) & (lo < hi)
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        pos, _ = jax.lax.fori_loop(0, n_tile_iter, tile_body, (w_lo, w_hi))
+        v_fence = fence_ref[0, jnp.clip(jt + 1, 0, n_fence - 1)]
+        v_at = jnp.where(pos < w_hi, dec(pos), v_fence)
+        found = (pos < hi0) & (v_at == d)
+
+        p = jnp.clip(pos, 0, vals_ref.shape[1] - 1)
+        dma = pltpu.make_async_copy(vals_ref.at[k, p], buf, sem_v)
+        dma.start()
+        dma.wait()
+        row = buf[...].astype(jnp.float32)
+        if quantized:
+            row = row * scale_ref[0, 0]
+        row = row * jnp.where(found, 1.0, 0.0).astype(jnp.float32)
+        out_ref[...] = row[None, None]
+
+    return _kernel
+
+
+def csr_lookup_packed_pallas(shard: jnp.ndarray, lo: jnp.ndarray,
+                             hi: jnp.ndarray, doc_targets: jnp.ndarray,
+                             packed, fences: jnp.ndarray,
+                             values: jnp.ndarray, scale, *,
+                             tile: int, max_tile_words: int,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Packed-codec ``csr_lookup_pallas``.  ``packed`` is the
+    ``(packed_words (K, W), tile_bits (K, F), tile_base (K, F),
+    tile_word_off (K, F+1))`` tuple; ``values`` is f32 (codec "packed")
+    or int8 (codec "packed-q8"), in which case ``scale`` carries the
+    per-pair dequant scale shaped (Q, 1) for term routing or (Q, B) for
+    pair routing (gathered outside from the per-term scale table).
+    -> M (B, Q, n_b, n_f) f32."""
+    words, bits, base_t, woff = packed
+    Q = shard.shape[0]
+    B = doc_targets.shape[0]
+    n_fence = fences.shape[1]
+    n_b, n_f = values.shape[2], values.shape[3]
+    pair_routed = shard.ndim == 2
+    row_map = ((lambda i, j, s, lo, hi: (s[i, j], 0)) if pair_routed
+               else (lambda i, j, s, lo, hi: (s[i], 0)))
+    quantized = values.dtype == jnp.int8
+    if scale is None:
+        scale = jnp.ones((Q, 1), jnp.float32)
+    scale_map = ((lambda i, j, s, lo, hi: (i, j)) if scale.shape[1] == B
+                 else (lambda i, j, s, lo, hi: (i, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # shard, lo, hi
+        grid=(Q, B),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, s, lo, hi: (0, j)),
+            pl.BlockSpec((1, n_fence), row_map),       # owner's fence row
+            pl.BlockSpec((1, n_fence), row_map),       # owner's tile bits
+            pl.BlockSpec((1, n_fence), row_map),       # owner's tile base
+            pl.BlockSpec((1, n_fence + 1), row_map),   # owner's word offs
+            pl.BlockSpec((1, 1), scale_map),           # pair dequant scale
+            pl.BlockSpec(memory_space=pltpu.ANY),      # packed words (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),      # values stay in HBM
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_b, n_f),
+                               lambda i, j, s, lo, hi: (j, i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, max_tile_words), jnp.int32),
+            pltpu.VMEM((n_b, n_f), values.dtype),
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        _make_packed_kernel(tile, bisect_steps(n_fence), bisect_steps(tile),
+                            pair_routed, max_tile_words, quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Q, n_b, n_f), jnp.float32),
+        interpret=interpret,
+    )(shard, lo, hi, doc_targets[None].astype(jnp.int32), fences, bits,
+      base_t, woff, scale.astype(jnp.float32), words, values)
+
+
+def _make_packed_retrieve_kernel(tile: int, mw: int, n_pad: int,
+                                 w_pad: int):
+    def _kernel(k_ref, woff_ref, start_ref, packed_ref, vals_ref,
+                words_out, vals_out, sem_i, sem_v):
+        lane = pl.program_id(0)
+        w = pl.program_id(1)
+        k = k_ref[lane]
+        # per-(lane, window) word offsets ride the scalar prefetch
+        # stream (they are a gather by tile index — cheap outside, a
+        # second DMA hop inside); clamps only engage for windows wholly
+        # past the lane's live span, which the merge masks out
+        wo = jnp.clip(woff_ref[lane, w], 0, w_pad - mw)
+        s = jnp.clip(start_ref[lane] + w * tile, 0, n_pad - tile)
+        cp_i = pltpu.make_async_copy(
+            packed_ref.at[pl.ds(k, 1), pl.ds(wo, mw)], words_out, sem_i)
+        cp_v = pltpu.make_async_copy(
+            vals_ref.at[pl.ds(k, 1), pl.ds(s, tile)], vals_out, sem_v)
+        cp_i.start()
+        cp_v.start()
+        cp_i.wait()
+        cp_v.wait()
+
+    return _kernel
+
+
+def retrieve_windows_packed_pallas(lane_shard: jnp.ndarray,
+                                   lane_woff: jnp.ndarray,
+                                   lane_start: jnp.ndarray,
+                                   packed_words: jnp.ndarray,
+                                   values: jnp.ndarray, *,
+                                   tile: int, max_tile_words: int,
+                                   n_win: int, interpret: bool = False):
+    """Packed-codec ``retrieve_windows_pallas``.
+
+    Lanes are tile-ALIGNED here (ops aligns ``lane_start`` down to the
+    posting-tile boundary — the codec's atomic unit — and masks the
+    leading foreign entries via ``merge_windows(lead=...)``), so window
+    w of lane l is exactly posting tile ``start/tile + w`` and its
+    packed words are one fixed ``max_tile_words`` DMA from
+    ``lane_woff[l, w]``.  Ids come back as RAW packed words — the
+    bit-unpack is a vector gather per element, which ops runs outside
+    the kernel in jnp for the same reason the merge scatter lives
+    outside; values DMA at their storage dtype (f32 or int8, dequant
+    outside).  Returns ``(words (L, n_win*max_tile_words) int32,
+    vals (L, n_win*tile, n_b, n_f) values.dtype)``.
+    """
+    n_lanes = lane_shard.shape[0]
+    n_pad = values.shape[1]
+    w_pad = packed_words.shape[1]
+    n_b, n_f = values.shape[2], values.shape[3]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # lane_shard, lane_woff, start
+        grid=(n_lanes, n_win),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),      # packed words (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),      # values stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_tile_words), lambda l, w, k, o, s: (l, w)),
+            pl.BlockSpec((1, tile, n_b, n_f),
+                         lambda l, w, k, o, s: (l, w, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        _make_packed_retrieve_kernel(tile, max_tile_words, n_pad, w_pad),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes, n_win * max_tile_words),
+                                 jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, n_win * tile, n_b, n_f),
+                                 values.dtype),
+        ],
+        interpret=interpret,
+    )(lane_shard.astype(jnp.int32), lane_woff.astype(jnp.int32),
+      lane_start.astype(jnp.int32), packed_words, values)

@@ -27,13 +27,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import csr_lookup_pallas, retrieve_windows_pallas
-from .ref import (bisect_steps, csr_lookup_ref, lookup_pairs_ref,
-                  merge_windows, retrieve_block_ref, retrieve_lanes,
-                  route_pairs, route_terms)
+from .kernel import (csr_lookup_packed_pallas, csr_lookup_pallas,
+                     retrieve_windows_packed_pallas, retrieve_windows_pallas)
+from .ref import (bisect_steps, csr_lookup_packed_ref, csr_lookup_ref,
+                  lookup_pairs_ref, merge_windows, packed_bisect,
+                  retrieve_block_packed_ref, retrieve_block_ref,
+                  retrieve_lanes, route_pairs, route_terms, _lane_scale)
 
 
-@partial(jax.jit, static_argnames=("tile", "interpret"))
+def _check_packed_args(codec, packed, fences, values, tile, t):
+    """Shared packed-arg validation: the codec's tile width is baked into
+    the packed layout (word offsets, fence spacing), so a mismatched
+    ``tile`` cannot be repacked on the fly the way raw fences are rebuilt
+    — fail loudly instead of issuing wrong-offset DMAs in the kernel."""
+    from ...core.index import fence_count
+
+    if packed is None:
+        raise ValueError(f"codec {codec!r} needs the packed posting "
+                         "arrays (packed_words, tile_bits, tile_base, "
+                         "tile_word_off)")
+    if fences is None:
+        raise ValueError(f"codec {codec!r} needs the build-time fence "
+                         "rows (the codec keeps them uncompressed as "
+                         "tile anchors; they cannot be rebuilt from "
+                         "packed tiles at lookup time)")
+    n_fence = fence_count(values.shape[1], t)
+    if packed[1].shape[1] != n_fence or fences.shape[1] != n_fence:
+        raise ValueError(
+            f"tile={tile} does not match the packed tile layout "
+            f"({packed[1].shape[1]} packed tiles / {fences.shape[1]} "
+            f"fences vs {n_fence} expected); packed indexes serve only "
+            "at their build-time codec tile")
+    if codec == "packed-q8" and values.dtype != jnp.int8:
+        raise ValueError("codec 'packed-q8' expects int8 values")
+
+
+@partial(jax.jit,
+         static_argnames=("tile", "interpret", "codec", "max_tile_words",
+                          "codec_spans"))
 def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                values: jnp.ndarray, term_to_shard, range_lo,
                query_terms: jnp.ndarray, doc_targets: jnp.ndarray,
@@ -41,7 +72,12 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                split_term: jnp.ndarray | None = None,
                split_doc: jnp.ndarray | None = None,
                tile: int | None = None,
-               interpret: bool | None = None) -> jnp.ndarray:
+               interpret: bool | None = None,
+               codec: str = "none",
+               packed=None,
+               value_scale: jnp.ndarray | None = None,
+               max_tile_words: int = 0,
+               codec_spans: tuple = (0, 0)) -> jnp.ndarray:
     """Fused lookup–merge: query_terms (Q,) x doc_targets (B,) over a
     K-stacked shard CSR -> M_{q,d} (B, Q, n_b, n_f); zeros for absent
     pairs, OOV / past-vocab terms and out-of-range doc ids.
@@ -53,14 +89,54 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     are the doc-range sub-shard tables of hot-term-split indexes (the
     owner then depends on the candidate doc, so routing is per pair);
     ``fences``/``tile`` configure the kernel's two-level bisect.
+
+    ``codec="packed"``/``"packed-q8"`` serves tile-compressed postings
+    (``core.codec``): ``doc_ids`` is None, ``packed`` carries the
+    ``(packed_words, tile_bits, tile_base, tile_word_off)`` tuple (plus
+    ``max_tile_words``, the static per-tile DMA window), and for q8
+    ``values`` is int8 with ``value_scale (K, Vmax)`` per-term dequant
+    scales.  Ids decode losslessly, so packed results stay bitwise-equal
+    to the uncompressed oracle; ``tile`` must equal the build-time codec
+    tile (packed layouts cannot be re-tiled on the fly).
+    ``codec_spans`` is the pack-time (max tiles spanned, max posting-list
+    length) loop-bound hint the CPU lowering's two-level bisect uses —
+    ``(0, 0)`` falls back to the worst-case iteration counts.
     """
     from ...core.index import POSTING_TILE, build_fences, fence_count
 
+    t = int(tile or POSTING_TILE)
+    if codec != "none":
+        _check_packed_args(codec, packed, fences, values, tile, t)
+        if interpret is None and jax.default_backend() != "tpu":
+            return csr_lookup_packed_ref(
+                term_offsets, packed, fences, values, value_scale,
+                term_to_shard, range_lo, query_terms, doc_targets,
+                split_term, split_doc, tile=t, spans=tuple(codec_spans))
+        if split_term is None:
+            k, lo, hi = route_terms(query_terms, term_offsets,
+                                    term_to_shard, range_lo)
+            scale_w = query_terms
+        else:
+            shape = (query_terms.shape[0], doc_targets.shape[0])  # (Q, B)
+            scale_w = jnp.broadcast_to(query_terms[:, None], shape)
+            k, lo, hi = route_pairs(
+                scale_w, jnp.broadcast_to(doc_targets[None], shape),
+                term_offsets, term_to_shard, range_lo, split_term,
+                split_doc)
+        scale = None
+        if value_scale is not None:
+            scale = _lane_scale(value_scale, range_lo, k, scale_w)
+            if scale.ndim == 1:
+                scale = scale[:, None]                   # (Q, 1)
+        return csr_lookup_packed_pallas(
+            k.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32),
+            doc_targets.astype(jnp.int32), packed, fences, values, scale,
+            tile=t, max_tile_words=int(max_tile_words),
+            interpret=bool(interpret))
     if interpret is None and jax.default_backend() != "tpu":
         return csr_lookup_ref(term_offsets, doc_ids, values, term_to_shard,
                               range_lo, query_terms, doc_targets,
                               split_term, split_doc)
-    t = int(tile or POSTING_TILE)
     if split_term is None:
         k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
                                 range_lo)
@@ -139,6 +215,75 @@ def _retrieve_block_windows(term_offsets, dids_p, vals_p, term_to_shard,
     return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
 
 
+def _pad_vals_for_windows(values, t):
+    """Values-only window padding at the storage dtype (f32 or int8) —
+    the packed path has no raw doc-id row to pad; ids travel as packed
+    words whose own rows are already padded by one DMA window."""
+    from ...core.index import fence_count
+
+    n = values.shape[1]
+    pad = fence_count(n, t) * t + t - n
+    return jnp.pad(values, ((0, 0), (0, pad)) + ((0, 0),) * (values.ndim - 2))
+
+
+def _retrieve_block_windows_packed(term_offsets, packed, fences, vals_p,
+                                   value_scale, term_to_shard, range_lo,
+                                   range_hi, query_terms, blo, block,
+                                   t, mw, interpret):
+    """Packed-codec kernel-path doc block.
+
+    Lane windows must start on posting-tile boundaries — the tile is the
+    codec's atomic decode unit — so each lane's window run is aligned
+    DOWN from its first live position (one extra window absorbs the
+    spill) and ``merge_windows(lead=...)`` masks the leading foreign
+    entries.  The two range bisects run as packed two-level bisects; the
+    kernel DMAs fixed ``max_tile_words`` packed-word windows plus the
+    value windows at their storage dtype, and the bit-unpack of the id
+    windows happens OUT HERE in jnp — it is a vector gather per element,
+    the same reason the merge scatter never entered the kernel.
+    """
+    words, bits, base_t, woff = packed
+    k_n, n_pad = vals_p.shape[0], vals_p.shape[1]
+    f = bits.shape[1]
+    q_n = query_terms.shape[0]
+    lo_f, hi_f = retrieve_lanes(query_terms, term_offsets, term_to_shard,
+                                range_lo, range_hi, n_pad)
+    ks = jnp.broadcast_to(jnp.arange(k_n, dtype=jnp.int32)[None, :],
+                          lo_f.shape)
+    base = ks * n_pad
+    lo_l, hi_l = lo_f - base, hi_f - base
+    s_lo = packed_bisect(packed, fences, ks, lo_l, hi_l,
+                         jnp.broadcast_to(blo, lo_l.shape), tile=t)
+    s_hi = packed_bisect(packed, fences, ks, lo_l, hi_l,
+                         jnp.broadcast_to(blo + block, lo_l.shape), tile=t)
+    j0 = s_lo // t
+    lead = s_lo - j0 * t                                  # (Q, K)
+    n_win = -(-block // t) + 1                            # +1: lead spill
+    jwin = jnp.clip(j0[..., None] + jnp.arange(n_win), 0, f - 1)
+    lane_woff = woff[ks[..., None], jwin].reshape(-1, n_win)
+    words_w, vals_w = retrieve_windows_packed_pallas(
+        ks.reshape(-1), lane_woff, (j0 * t).reshape(-1), words, vals_p,
+        tile=t, max_tile_words=mw, n_win=n_win, interpret=interpret)
+    # decode the id windows: tile metadata gathered per (lane, window),
+    # words gathered per element from the DMA'd fixed-size blocks
+    ww = words_w.reshape(q_n, k_n, n_win, mw)
+    c = bits[ks[..., None], jwin]                         # (Q, K, n_win)
+    tb = base_t[ks[..., None], jwin]
+    bp = jnp.arange(t)[None, None, None, :] * c[..., None]
+    wv = jnp.take_along_axis(ww, jnp.clip(bp // 32, 0, mw - 1), axis=-1)
+    rel = jax.lax.shift_right_logical(wv, jnp.bitwise_and(bp, 31)) \
+        & ((1 << jnp.minimum(c, 16)) - 1)[..., None]
+    ids = jnp.where(c[..., None] == 32, wv, tb[..., None] + rel)
+    w = n_win * t
+    doc_win = ids.reshape(q_n, k_n, w)
+    val_win = vals_w.reshape((q_n, k_n, w) + vals_p.shape[2:])
+    if value_scale is not None:
+        scale = _lane_scale(value_scale, range_lo, ks, query_terms[:, None])
+        val_win = val_win.astype(jnp.float32) * scale[..., None, None, None]
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block,
+                         lead=lead)
+
+
 def _retrieve_dispatch(impl):
     """Map the index-level ``impl`` knob onto (use_ref, interpret).
 
@@ -158,12 +303,18 @@ def _retrieve_dispatch(impl):
     return jax.default_backend() != "tpu", False
 
 
-@partial(jax.jit, static_argnames=("block", "tile", "impl"))
+@partial(jax.jit, static_argnames=("block", "tile", "impl", "codec",
+                                   "max_tile_words", "codec_spans"))
 def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                        values: jnp.ndarray, term_to_shard, range_lo,
                        range_hi, query_terms: jnp.ndarray, blo, *,
                        block: int, tile: int | None = None,
-                       impl: str | None = None) -> jnp.ndarray:
+                       impl: str | None = None, codec: str = "none",
+                       packed=None,
+                       value_scale: jnp.ndarray | None = None,
+                       max_tile_words: int = 0,
+                       codec_spans: tuple = (0, 0),
+                       fences: jnp.ndarray | None = None) -> jnp.ndarray:
     """Posting-range scan entry point: M rows for docs
     ``[blo, blo + block)`` x query_terms (Q,) over a K-stacked shard CSR
     -> (block, Q, n_b, n_f), built by walking the query's posting lists
@@ -172,16 +323,29 @@ def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     Results are exact vs the per-pair lookup: exclusive shard ownership
     means the segment merge writes each cell at most once, zeros
     elsewhere (the sigma=0 semantics).  Dispatch via ``impl`` — see
-    :func:`_retrieve_dispatch`.
+    :func:`_retrieve_dispatch`; packed codecs as in :func:`csr_lookup`
+    (``tile`` must equal the build-time codec tile).
     """
     use_ref, interpret = _retrieve_dispatch(impl)
+    from ...core.index import POSTING_TILE
+
+    t = int(tile or POSTING_TILE)
+    if codec != "none":
+        _check_packed_args(codec, packed, fences, values, tile, t)
+        if use_ref:
+            return retrieve_block_packed_ref(
+                term_offsets, packed, fences, values, value_scale,
+                term_to_shard, range_lo, range_hi, query_terms, blo,
+                block, tile=t, spans=tuple(codec_spans))
+        vals_p = _pad_vals_for_windows(values, t)
+        return _retrieve_block_windows_packed(
+            term_offsets, packed, fences, vals_p, value_scale,
+            term_to_shard, range_lo, range_hi, query_terms, blo, block,
+            t, int(max_tile_words), interpret)
     if use_ref:
         return retrieve_block_ref(term_offsets, doc_ids, values,
                                   term_to_shard, range_lo, range_hi,
                                   query_terms, blo, block)
-    from ...core.index import POSTING_TILE
-
-    t = int(tile or POSTING_TILE)
     dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
     return _retrieve_block_windows(term_offsets, dids_p, vals_p,
                                    term_to_shard, range_lo, range_hi,
@@ -192,7 +356,12 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                       values: jnp.ndarray, term_to_shard, range_lo,
                       range_hi, query_terms: jnp.ndarray, *, n_docs: int,
                       k: int, score_block_fn, doc_block: int | None = None,
-                      tile: int | None = None, impl: str | None = None):
+                      tile: int | None = None, impl: str | None = None,
+                      codec: str = "none", packed=None,
+                      value_scale: jnp.ndarray | None = None,
+                      max_tile_words: int = 0,
+                      codec_spans: tuple = (0, 0),
+                      fences: jnp.ndarray | None = None):
     """First-stage top-k driver: scan the whole corpus in doc blocks,
     score each block with ``score_block_fn(M_block, doc_ids_block) ->
     (block,)``, and keep a running device-side top-k.
@@ -224,15 +393,31 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     block = int(doc_block or min(max(n_docs, 1), 1024))
     n_blocks = -(-max(n_docs, 1) // block)
     use_ref, interpret = _retrieve_dispatch(impl)
-    if use_ref:
+    from ...core.index import POSTING_TILE
+
+    t = int(tile or POSTING_TILE)
+    if codec != "none":
+        _check_packed_args(codec, packed, fences, values, tile, t)
+        if use_ref:
+            def block_m(blo):
+                return retrieve_block_packed_ref(
+                    term_offsets, packed, fences, values, value_scale,
+                    term_to_shard, range_lo, range_hi, query_terms, blo,
+                    block, tile=t, spans=tuple(codec_spans))
+        else:
+            vals_p = _pad_vals_for_windows(values, t)
+
+            def block_m(blo):
+                return _retrieve_block_windows_packed(
+                    term_offsets, packed, fences, vals_p, value_scale,
+                    term_to_shard, range_lo, range_hi, query_terms, blo,
+                    block, t, int(max_tile_words), interpret)
+    elif use_ref:
         def block_m(blo):
             return retrieve_block_ref(term_offsets, doc_ids, values,
                                       term_to_shard, range_lo, range_hi,
                                       query_terms, blo, block)
     else:
-        from ...core.index import POSTING_TILE
-
-        t = int(tile or POSTING_TILE)
         dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
 
         def block_m(blo):
@@ -258,7 +443,8 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     return jax.lax.fori_loop(0, n_blocks, body, init)
 
 
-__all__ = ["csr_lookup", "csr_lookup_ref", "csr_retrieve_block",
-           "csr_retrieve_topk", "lookup_pairs_ref", "merge_windows",
-           "retrieve_block_ref", "retrieve_lanes", "route_pairs",
-           "route_terms"]
+__all__ = ["csr_lookup", "csr_lookup_packed_ref", "csr_lookup_ref",
+           "csr_retrieve_block", "csr_retrieve_topk",
+           "lookup_pairs_ref", "merge_windows", "packed_bisect",
+           "retrieve_block_packed_ref", "retrieve_block_ref",
+           "retrieve_lanes", "route_pairs", "route_terms"]

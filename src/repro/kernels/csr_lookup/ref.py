@@ -145,7 +145,10 @@ def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     pos = _bisect(flat, base + lo, base + hi, d, n_iter=bisect_steps(N))
     in_list = (pos < base + hi) & (flat.at[pos].get(mode="clip") == d)
     vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
-    return vals * in_list[..., None, None]
+    # select, not multiply-by-mask: XLA fuses the select into the gather
+    # consumer, a bool-mask product materialises a second full-size pass
+    # (~15% of the lookup on CPU); absent pairs are +0.0 either way
+    return jnp.where(in_list[..., None, None], vals, 0.0)
 
 
 def retrieve_lanes(query_terms: jnp.ndarray, term_offsets: jnp.ndarray,
@@ -196,7 +199,8 @@ def retrieve_lanes(query_terms: jnp.ndarray, term_offsets: jnp.ndarray,
 
 
 def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
-                  n_valid: jnp.ndarray, blo, block: int) -> jnp.ndarray:
+                  n_valid: jnp.ndarray, blo, block: int,
+                  lead=None) -> jnp.ndarray:
     """Scatter gathered posting windows into one dense doc-block of M.
 
     ``doc_win`` (Q, K, W) doc ids / ``val_win`` (Q, K, W, n_b, n_f)
@@ -208,10 +212,20 @@ def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
     semantics — so the result equals the per-pair lookup bit-for-bit
     (modulo ±0, which the exact-zero merge semantics treat as equal).
 
+    ``lead`` (Q, K), when given, shifts each lane's live span to
+    ``[lead, lead + n_valid)``: the packed retrieve path DMAs windows
+    aligned DOWN to the posting-tile boundary (the tile is the codec's
+    atomic decode unit), so the first ``lead`` entries belong to doc ids
+    below the block and must fall in the overflow bin with the tail.
+
     Returns M (block, Q, n_b, n_f).
     """
     q_n, k_n, w_n = doc_win.shape
-    in_win = jnp.arange(w_n)[None, None, :] < n_valid[..., None]
+    idx = jnp.arange(w_n)[None, None, :]
+    if lead is None:
+        in_win = idx < n_valid[..., None]
+    else:
+        in_win = (idx >= lead[..., None]) & (idx < (lead + n_valid)[..., None])
     seg = jnp.where(in_win, doc_win - blo, block)         # overflow bin
     seg = seg.reshape(q_n, k_n * w_n)
     vals = val_win.reshape((q_n, k_n * w_n) + val_win.shape[3:])
@@ -282,4 +296,229 @@ def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     pos = _bisect(flat, lo_f, hi_f, d, n_iter=bisect_steps(N))
     in_list = (pos < hi_f) & (flat.at[pos].get(mode="clip") == d)
     vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
-    return vals * in_list[..., None, None]
+    # select over multiply-by-mask: see lookup_pairs_ref
+    return jnp.where(in_list[..., None, None], vals, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# packed-codec lowerings (core.codec tile-compressed postings)
+# ---------------------------------------------------------------------------
+
+def packed_bisect(packed, fences, k, lo, hi, target, *, tile: int,
+                  spans=(0, 0), with_value: bool = False):
+    """First shard-local position p in [lo, hi) with decode(k, p) >= target.
+
+    Two-level, mirroring the Pallas kernel: level 1 bisects the
+    UNCOMPRESSED fence row (the codec keeps fences raw — they are the
+    tile skip pointers), one metadata gather picks up the winning tile's
+    (bits, base, word offset), level 2 bisects inside the tile with
+    probes that decode a single packed word (shift + mask).  That is
+    O(log F + log tile) one-word gathers instead of O(log Nmax) probes
+    each paying the full 4-gather random-access decode — the difference
+    between the packed CPU lowering tracking the uncompressed one and a
+    ~4x regression.  The split is exact (every tile strictly left of the
+    winning fence is wholly < target, so the lower bound lives in the
+    winning tile or at its right boundary), hence positions are
+    bitwise-equal to ``core.index._bisect`` over the unpacked row.
+
+    ``packed`` is ``(packed_words (K, W), tile_bits (K, F), tile_base
+    (K, F), tile_word_off (K, F+1))``; k/lo/hi/target broadcastable
+    int32 arrays in shard-LOCAL position space.
+
+    ``spans = (max_span, max_len)`` is the pack-time loop-bound hint
+    (``PartitionedIndex.codec_spans``): no routed range spans more than
+    ``max_span`` tiles or holds more than ``max_len`` postings, so both
+    levels can run just enough iterations to converge instead of the
+    worst case over the whole fence row / tile — at bench scale that is
+    1-2 fence probes instead of ~6.  ``(0, 0)`` = unknown, worst case.
+    Extra iterations are no-ops (the bisect is stationary once
+    converged), so a loose hint only costs time, never positions.
+
+    ``with_value=True`` additionally returns the decoded doc id at
+    ``pos``, reusing the tile metadata already gathered: one packed-word
+    probe in-tile, and for ``pos`` on the tile's right boundary (the
+    next tile's first element) the UNCOMPRESSED next fence — which is
+    that element verbatim.  Callers use it for the found check without
+    paying :func:`~repro.core.codec.unpack_at`'s fresh metadata gathers;
+    positions past ``hi`` may decode garbage there, but every caller
+    masks on ``pos < hi`` before the value matters.
+    """
+    # every probe gathers through a PRE-FLATTENED 1-D view with a
+    # precomputed per-pair row offset — the same access pattern as the
+    # uncompressed ref's flat bisect.  2-D advanced-index gathers
+    # (``arr.at[k, idx]``) re-lower the two index operands every loop
+    # iteration on CPU and cost ~2x per probe.
+    words, bits, base_t, woff = packed
+    f = fences.shape[1]
+    fflat = fences.reshape(-1)
+    k = jnp.clip(k, 0, fences.shape[0] - 1)     # one clamp, not per-probe
+    kf = k * f
+    j_lo = lo // tile
+    j_hi = jnp.maximum((hi - 1) // tile, j_lo)
+    max_span, max_len = spans
+    f_steps = bisect_steps(min(max_span - 1, f) if max_span else f)
+    t_steps = bisect_steps(min(max_len, tile) if max_len else tile)
+
+    def fence_body(_, state):
+        flo, fhi = state
+        mid = (flo + fhi) // 2
+        v = fflat[kf + jnp.clip(mid, 0, f - 1)]
+        go_right = (v < target) & (flo < fhi)
+        return (jnp.where(go_right, mid + 1, flo),
+                jnp.where(go_right, fhi, mid))
+
+    jf, _ = jax.lax.fori_loop(0, f_steps, fence_body,
+                              (j_lo + 1, j_hi + 1))
+    jt = jnp.clip(jf - 1, 0, f - 1)
+    base = jt * tile
+    kfj = kf + jt
+    c = bits.reshape(-1)[kfj]
+    tb = base_t.reshape(-1)[kfj]
+    wo = woff.reshape(-1)[k * (f + 1) + jt]
+    mask = (1 << jnp.minimum(c, 16)) - 1
+    # flat word offset of the tile's first word; bp // 32 stays within
+    # the row because rows are padded by max_tile_words trailing words
+    kwo = k * words.shape[1] + wo
+    wflat = words.reshape(-1)
+    c32 = c == 32
+    w_lo = jnp.maximum(base, lo)
+    w_hi = jnp.minimum(base + tile, hi)
+
+    def decode_word(r):
+        # r in [0, tile]: r == tile only for converged/boundary probes
+        # whose value is never consulted, and its word stays in-row (the
+        # max_tile_words trailing pad); no per-probe clip needed
+        bp = r * c
+        wv = wflat[kwo + bp // 32]
+        return jnp.where(c32, wv,
+                         tb + (jax.lax.shift_right_logical(
+                             wv, jnp.bitwise_and(bp, 31)) & mask))
+
+    def tile_body(_, state):
+        plo, phi = state
+        mid = (plo + phi) // 2
+        go_right = (decode_word(mid - base) < target) & (plo < phi)
+        return (jnp.where(go_right, mid + 1, plo),
+                jnp.where(go_right, phi, mid))
+
+    pos, _ = jax.lax.fori_loop(0, t_steps, tile_body, (w_lo, w_hi))
+    if not with_value:
+        return pos
+    # decode at pos with the metadata in hand: in-tile is one word probe;
+    # on the right boundary the element IS the next tile's fence (raw)
+    v_next = fflat[kf + jnp.clip(jt + 1, 0, f - 1)]
+    in_tile = pos - base < tile
+    v_at = jnp.where(in_tile, decode_word(jnp.where(in_tile, pos - base, 0)),
+                     v_next)
+    return pos, v_at
+
+
+def _lane_scale(value_scale, range_lo, k, term_ids):
+    """Per-(pair/lane) dequant scale: the owning shard's per-local-term
+    scale row.  Only consulted where a pair is actually found / a lane
+    actually owns postings, so clipped garbage rows are never applied."""
+    vmax = value_scale.shape[1]
+    w = term_ids.clip(0)
+    if range_lo is None:
+        row = w.clip(0, vmax - 1)
+    else:
+        row = (w - range_lo.at[k].get(mode="clip")).clip(0, vmax - 1)
+    return value_scale.at[k, row].get(mode="clip")
+
+
+def _lookup_packed(term_offsets, packed, fences, values, value_scale,
+                   term_to_shard, range_lo, split_term, split_doc,
+                   term_ids, d, *, tile: int, spans=(0, 0)):
+    """Shared body of the packed lookup refs: route, two-level packed
+    bisect, decode-at-found check, values gather (+ optional dequant).
+    ``term_ids``/``d`` already broadcast to the common pair shape."""
+    k_n, nmax = values.shape[0], values.shape[1]
+    k, lo, hi = _route(term_ids, d, term_offsets, term_to_shard, range_lo,
+                       split_term, split_doc)
+    # found only ever tests pos < hi <= nnz_k, where the decode is exact;
+    # past-the-range positions are masked before the comparison matters
+    pos, v_at = packed_bisect(packed, fences, k, lo, hi, d, tile=tile,
+                              spans=spans, with_value=True)
+    found = (pos < hi) & (v_at == d)
+    flat = values.reshape((k_n * nmax,) + values.shape[2:])
+    if value_scale is not None:
+        # int8 dequant: convert+scale fused into the gather consumer, one
+        # full-size select at the end.  The barrier pins the (tiny,
+        # pair-shaped) bisect outputs as materialised gather operands —
+        # without it XLA threads the bisect producer chain into the
+        # gather loop and the dequant pass runs ~1.4x slower on CPU.
+        scale = _lane_scale(value_scale, range_lo, k, term_ids)
+        ix, sc, fd = jax.lax.optimization_barrier(
+            (k * nmax + pos, scale, found))
+        vals = flat.at[ix].get(mode="clip").astype(jnp.float32)
+        return jnp.where(fd[..., None, None], vals * sc[..., None, None], 0.0)
+    ix, fd = jax.lax.optimization_barrier((k * nmax + pos, found))
+    vals = flat.at[ix].get(mode="clip")
+    # select over multiply-by-mask: see lookup_pairs_ref
+    return jnp.where(fd[..., None, None], vals, 0.0)
+
+
+def lookup_pairs_packed_ref(term_offsets, packed, fences, values,
+                            value_scale, term_to_shard, range_lo,
+                            term_ids, doc_targets, split_term=None,
+                            split_doc=None, *, tile: int, spans=(0, 0)):
+    """Packed-codec :func:`lookup_pairs_ref`: term_ids (..., Q) x
+    doc_targets broadcastable (...,) -> (..., Q, n_b, n_f).  Ids decode
+    losslessly, so found masks/positions — and with f32 ``values`` the
+    outputs — are bitwise-equal to the uncompressed ref; int8 ``values``
+    (+ ``value_scale``) dequantise on the fly."""
+    d = jnp.broadcast_to(doc_targets[..., None], term_ids.shape)
+    return _lookup_packed(term_offsets, packed, fences, values,
+                          value_scale, term_to_shard, range_lo,
+                          split_term, split_doc, term_ids, d, tile=tile,
+                          spans=spans)
+
+
+def csr_lookup_packed_ref(term_offsets, packed, fences, values,
+                          value_scale, term_to_shard, range_lo,
+                          query_terms, doc_targets, split_term=None,
+                          split_doc=None, *, tile: int, spans=(0, 0)):
+    """Packed-codec :func:`csr_lookup_ref`: query_terms (Q,) x
+    doc_targets (B,) -> M (B, Q, n_b, n_f)."""
+    shape = (doc_targets.shape[0], query_terms.shape[0])    # (B, Q)
+    d = jnp.broadcast_to(doc_targets[:, None], shape)
+    w = jnp.broadcast_to(query_terms[None], shape)
+    return _lookup_packed(term_offsets, packed, fences, values,
+                          value_scale, term_to_shard, range_lo,
+                          split_term, split_doc, w, d, tile=tile,
+                          spans=spans)
+
+
+def retrieve_block_packed_ref(term_offsets, packed, fences, values,
+                              value_scale, term_to_shard, range_lo,
+                              range_hi, query_terms, blo, block: int,
+                              *, tile: int, spans=(0, 0)):
+    """Packed-codec :func:`retrieve_block_ref` — same lane ranges, the
+    two range bisects run as packed two-level bisects, and the gathered
+    id windows decode through :func:`~repro.core.codec.unpack_at`.
+    Window entries past a lane's live span decode whatever the clip
+    lands on; merge_windows masks them to the overflow bin exactly as
+    the uncompressed path masks its clip-gather garbage."""
+    from ...core.codec import unpack_at
+
+    k_n, nmax = values.shape[0], values.shape[1]
+    lo_f, hi_f = retrieve_lanes(query_terms, term_offsets, term_to_shard,
+                                range_lo, range_hi, nmax)
+    ks = jnp.broadcast_to(jnp.arange(k_n, dtype=jnp.int32)[None, :],
+                          lo_f.shape)
+    base = ks * nmax
+    lo_l, hi_l = lo_f - base, hi_f - base
+    s_lo = packed_bisect(packed, fences, ks, lo_l, hi_l,
+                         jnp.broadcast_to(blo, lo_l.shape), tile=tile,
+                         spans=spans)
+    s_hi = packed_bisect(packed, fences, ks, lo_l, hi_l,
+                         jnp.broadcast_to(blo + block, lo_l.shape),
+                         tile=tile, spans=spans)
+    p = s_lo[..., None] + jnp.arange(block)               # (Q, K, block)
+    doc_win = unpack_at(*packed, ks[..., None], p, tile=tile)
+    flat_p = jnp.clip(base[..., None] + p, 0, k_n * nmax - 1)
+    val_win = values.reshape((k_n * nmax,) + values.shape[2:])[flat_p]
+    if value_scale is not None:
+        scale = _lane_scale(value_scale, range_lo, ks, query_terms[:, None])
+        val_win = val_win.astype(jnp.float32) * scale[..., None, None, None]
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)

@@ -39,6 +39,12 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="shard count for --partition term (default: the "
                          "mesh model-axis size, or 1 without a mesh)")
+    ap.add_argument("--codec", choices=["none", "packed", "packed-q8"],
+                    default="none",
+                    help="posting compression for --partition term: "
+                         "'packed' FOR/bit-packs doc ids per tile "
+                         "(lossless, decoded in-kernel), 'packed-q8' also "
+                         "int8-quantises values with per-term scales")
     ap.add_argument("--retrieve-k", type=int, default=0, metavar="K",
                     help="first-stage retrieval mode: ignore candidate "
                          "sets and return each query's corpus-wide top-K "
@@ -74,6 +80,12 @@ def main() -> None:
                  "scatter has no SPMD lowering yet); drop --data-parallel")
     if args.retrieve_k < 0:
         ap.error(f"--retrieve-k must be >= 0, got {args.retrieve_k}")
+    if args.codec != "none" and args.partition != "term":
+        ap.error(f"--codec {args.codec} requires --partition term (the "
+                 "packed layout is the stacked-shard PartitionedIndex)")
+    if args.codec != "none" and args.data_parallel:
+        ap.error("--codec is mesh-less only (the SPMD partial-sum lookup "
+                 "has no packed lowering); drop --data-parallel")
 
     cfg = seine_smoke()
     ds = generate(cfg, seed=args.seed)
@@ -87,7 +99,7 @@ def main() -> None:
         # no host ever materialises the global doc_ids/values CSR
         index = builder.build_partitioned(
             toks, segs, args.shards or 1, batch_size=16,
-            spill_dir=args.spill_dir)
+            spill_dir=args.spill_dir, codec=args.codec)
     else:
         index = builder.build(toks, segs, batch_size=16,
                               spill_dir=args.spill_dir)
@@ -138,7 +150,7 @@ def main() -> None:
         pidx = engine.index
         _log.info(
             "term-partitioned (shard-native build)",
-            shards=pidx.n_shards,
+            shards=pidx.n_shards, codec=pidx.codec,
             mb_per_device=f"{pidx.placed_per_device_nbytes / 1e6:.1f}",
             mb_per_device_at_k=f"{pidx.per_device_nbytes / 1e6:.1f}",
             total_mb=f"{pidx.nbytes / 1e6:.1f}")

@@ -57,6 +57,9 @@ seine_shard_nnz                       gauge     per-shard postings {shard=k}
 seine_shard_skew_max_ratio            gauge     widest shard / even split
 seine_shard_skew_mean_ratio           gauge     mean shard / even split
 seine_shard_hot_splits                gauge     doc-range sub-shard cuts
+seine_codec_tile_bits_total           gauge     posting tiles {bits=w}
+seine_codec_bytes_saved               gauge     posting bytes codec removed
+seine_codec_shrink                    gauge     raw / packed payload bytes
 seine_index_nnz                       gauge     nnz of the served index
 seine_index_nbytes                    gauge     bytes of the served index
 seine_engine_scores_total             counter   engine.score calls

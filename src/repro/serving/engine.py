@@ -82,16 +82,35 @@ class SeineEngine:
     posting-tile width (default ``core.index.POSTING_TILE``) — a serving
     knob for tuning VMEM footprint vs DMA count per cell; every width is
     bitwise-exact.
+
+    ``codec`` (with ``partition="term"``) serves tile-compressed postings
+    (``core.codec``): ``"packed"`` FOR/bit-packs doc ids per posting tile
+    (lossless — lookup and retrieval results stay bitwise-equal to the
+    uncompressed index), ``"packed-q8"`` additionally int8-quantises the
+    interaction values with per-term scales (~4x smaller, effectiveness-
+    gated in CI).  A pre-built PartitionedIndex carries its own codec and
+    is served as-is; packed layouts are mesh-less only and pin the
+    lookup tile to their build-time ``codec_tile``.
     """
 
     def __init__(self, index: PairLookupIndex, retriever: str,
                  params: Any, *, mesh: Optional[Any] = None,
                  partition: Optional[str] = None,
                  n_shards: Optional[int] = None,
-                 lookup_tile: Optional[int] = None):
+                 lookup_tile: Optional[int] = None,
+                 codec: str = "none",
+                 codec_tile: Optional[int] = None):
+        from ..core.codec import validate_codec
+        from ..dist.partition import PartitionedIndex
+        codec = validate_codec(codec)
         if partition not in (None, "term"):
             raise ValueError(f"unknown partition scheme {partition!r}; "
                              "supported: 'term'")
+        if (codec != "none" and partition != "term"
+                and not isinstance(index, PartitionedIndex)):
+            raise ValueError(
+                f"codec {codec!r} requires partition='term': the packed "
+                "posting layout is the stacked-shard PartitionedIndex")
         # reject, don't coerce: n_shards=0 used to fall through the falsy
         # `or` chain below and silently serve the mesh default — a surprise
         # configuration is worse than an error
@@ -108,9 +127,15 @@ class SeineEngine:
         # it ever is (latent AttributeError — _data_axes was only assigned
         # under `mesh is not None`)
         self._data_axes = ()
-        from ..dist.partition import PartitionedIndex
         if isinstance(index, PartitionedIndex):
-            # born-sharded (builder.build_partitioned): use it as-is
+            # born-sharded (builder.build_partitioned): use it as-is; it
+            # carries its own codec — a conflicting request is a config
+            # error, not something to re-encode silently
+            if codec != "none" and codec != index.codec:
+                raise ValueError(
+                    f"engine codec {codec!r} conflicts with the pre-built "
+                    f"index's codec {index.codec!r}; pack at build time "
+                    "(build_partitioned(codec=...)) or pass codec='none'")
             if mesh is not None:
                 from ..dist.sharding import shard_partitioned_index
                 index = shard_partitioned_index(index, mesh)
@@ -126,10 +151,27 @@ class SeineEngine:
             # warning) by the merger itself — partitioned_from_runs, the
             # single guard every build path shares — so tiny vocabularies
             # never ship zero-nnz shards
-            index = partition_index(index, k, mesh=mesh)
+            index = partition_index(index, k, mesh=mesh, codec=codec,
+                                    codec_tile=codec_tile)
         elif mesh is not None:
             from ..dist.sharding import shard_index
             index = shard_index(index, mesh)
+        served_codec = getattr(index, "codec", "none")
+        if served_codec != "none":
+            # satellite guards, at construction not first lookup: a mesh
+            # forces the jnp partial-sum impl (no packed lowering), and a
+            # lookup_tile cannot re-tile a baked packed layout
+            if mesh is not None:
+                raise ValueError(
+                    "packed codecs cannot serve under a mesh: the SPMD "
+                    "partial-sum lookup has no packed lowering (serve "
+                    "mesh-less, or build with codec='none')")
+            if (lookup_tile is not None
+                    and int(lookup_tile) != int(index.codec_tile)):
+                raise ValueError(
+                    f"lookup_tile {lookup_tile} does not match the packed "
+                    f"index's codec tile {index.codec_tile}; packed "
+                    "layouts serve only at their build-time tile")
         if mesh is not None:
             from ..dist.sharding import data_axes
             self._data_axes = data_axes(mesh) or tuple(
@@ -173,10 +215,14 @@ class SeineEngine:
                 self.index.nnz)
             obs.gauge("seine_index_nbytes", "bytes of the served index"
                       ).set(self.index.nbytes)
-            tile = int(lookup_tile or POSTING_TILE)
+            if getattr(self.index, "codec", "none") != "none":
+                tile, nmax = int(self.index.codec_tile), self.index.nmax
+            else:
+                tile = int(lookup_tile or POSTING_TILE)
+                nmax = int(self.index.doc_ids.shape[-1])
             obs.gauge("seine_lookup_tiles_per_shard",
                       "posting tiles per shard (ceil(Nmax / tile))").set(
-                -(-int(self.index.doc_ids.shape[-1]) // tile))
+                -(-nmax // tile))
 
     def _score_impl(self, params, query_terms, doc_ids):
         m = self.index.qd_matrix(query_terms, doc_ids,
@@ -272,6 +318,28 @@ class SeineEngine:
                 q = jnp.broadcast_to(qt[None], (docs.shape[0],) + qt.shape)
                 _, found = index.lookup_positions(q, docs)
                 return found.sum(), (q >= 0).sum()
+            return jax.jit(impl)
+
+        if index.codec != "none":
+            # packed layout: no raw doc_ids to vmap over — route per pair
+            # and resolve with the two-level packed bisect (the same
+            # positions the serving lookup lands on, ids decoded at the
+            # probe only)
+            from ..kernels.csr_lookup.ref import _route, packed_bisect
+
+            def impl(qt, docs):
+                q = jnp.broadcast_to(qt[None], (docs.shape[0],) + qt.shape)
+                d = jnp.broadcast_to(docs[..., None], q.shape)
+                valid = q >= 0
+                k, lo, hi = _route(q, d, index.term_offsets,
+                                   index.term_to_shard, index.range_lo,
+                                   index.split_term, index.split_doc)
+                pos, v = packed_bisect(index._packed(), index.fences, k,
+                                       lo, hi, d, tile=index.codec_tile,
+                                       spans=index.codec_spans,
+                                       with_value=True)
+                found = (pos < hi) & (v == d) & valid
+                return found.sum(), valid.sum()
             return jax.jit(impl)
 
         from ..core.index import csr_lookup_positions

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
-from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
+from ..ckpt import (latest_step, restore_checkpoint, save_checkpoint,
+                    wait_async)
 from ..dist.compression import compress_with_feedback
 from ..dist.fault import PreemptionGuard, StragglerMonitor
 from ..obs.metrics import DEFAULT_S_BUCKETS
@@ -97,6 +98,7 @@ def fit(state: TrainState, step_fn: Callable, next_batch: Callable[[int], Any],
         if guard is not None and guard.should_stop:
             if ckpt_dir:
                 _save(ckpt_dir, state, keep, data_state)
+                wait_async()
             if verbose:
                 _log.info("preempted; checkpointed", step=state.step)
             return res
@@ -131,12 +133,18 @@ def fit(state: TrainState, step_fn: Callable, next_batch: Callable[[int], Any],
             _save(ckpt_dir, state, keep, data_state)
     if ckpt_dir:
         _save(ckpt_dir, state, keep, data_state)
+        wait_async()
     return res
 
 
 def _save(ckpt_dir, state: TrainState, keep, data_state) -> None:
+    # async by default: the device->host gather runs on this thread, the
+    # file I/O + atomic publish overlap the next training steps.  Every
+    # fit() exit joins via wait_async(), which re-raises the first
+    # background write failure — a checkpoint that silently never landed
+    # must not look like a clean run.
     tree = {"params": state.params, "opt": state.opt_state,
             "residual": state.residual}
     extra = {"data": data_state()} if data_state else {}
     save_checkpoint(ckpt_dir, state.step, tree, extra=extra, keep=keep,
-                    async_write=False)
+                    async_write=True)

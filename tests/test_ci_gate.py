@@ -153,7 +153,7 @@ class TestGateCli:
     """End-to-end exit-code contract of the gate script."""
 
     def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3",
-             retrieval="default"):
+             retrieval="default", compressed="default"):
         import json
         import shutil
         root = tmp_path / "repo"
@@ -167,6 +167,11 @@ class TestGateCli:
         if retrieval is not None:
             (root / "BENCH_retrieval.json").write_text(
                 json.dumps(retrieval))
+        if compressed == "default":
+            compressed = self.GOOD_COMPRESSED
+        if compressed is not None:
+            (root / "BENCH_compressed.json").write_text(
+                json.dumps(compressed))
         args = [sys.executable, "scripts/bench_gate.py",
                 "--threshold", threshold]
         if baseline is not None:
@@ -191,6 +196,19 @@ class TestGateCli:
                         "per_path": {"csr": {"recall": 1.0, "pass": True}}},
         "paths": {"csr": {"retrieve_us": 1500.0, "queries_per_s": 666.0,
                           "recall_at_10": 1.0}},
+    }
+    GOOD_COMPRESSED = {
+        "latency_gate": {"metric": "l", "pass": True, "per_path": {
+            "term_k2_packed": {"ratio": 1.02, "ceiling": 1.1,
+                               "noise_floor": 1.01,
+                               "effective_ceiling": 1.111, "pass": True}}},
+        "shrink_gate": {"metric": "s", "pass": True, "per_path": {
+            "term_k2_packed-q8": {"shrink": 3.9, "floor": 2.5,
+                                  "pass": True}}},
+        "q8_effectiveness_gate": {"metric": "q", "pass": True, "per_path": {
+            "term_k2_packed-q8": {"recall": 1.0, "exact_ranking": True,
+                                  "floor": 0.9, "pass": True}}},
+        "paths": {"term_k2_packed": {"lookup_us": 95.0}},
     }
 
     def test_missing_file_is_distinct_exit_code(self, gate, tmp_path):
@@ -231,6 +249,23 @@ class TestGateCli:
         r = self._run(tmp_path, serve=self.GOOD_SERVE, baseline=baseline)
         assert r.returncode == gate.EXIT_FAIL
         assert "regressed" in r.stdout
+
+    def test_missing_compressed_file_is_distinct_exit_code(self, gate,
+                                                           tmp_path):
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, compressed=None)
+        assert r.returncode == gate.EXIT_MISSING
+        assert "BENCH_compressed.json" in r.stdout
+
+    def test_compressed_gate_failure_exits_one(self, gate, tmp_path):
+        comp = dict(self.GOOD_COMPRESSED)
+        comp["latency_gate"] = dict(
+            comp["latency_gate"],
+            **{"pass": False, "per_path": {"term_k2_packed": {
+                "ratio": 1.4, "ceiling": 1.1, "noise_floor": 1.01,
+                "effective_ceiling": 1.111, "pass": False}}})
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, compressed=comp)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "latency_gate" in r.stdout
 
 
 class TestMinilint:

@@ -1,0 +1,493 @@
+"""Tile-compressed posting codec: exactness and guard harness.
+
+Two layers, held to the same standard as the partition sweep:
+
+* ``core.codec`` in isolation — pack/unpack round-trips must be BITWISE
+  over adversarial rows (constant tiles, huge ids, mixed widths, tile-pad
+  tails), fences rebuilt from packed metadata must equal
+  ``core.index.build_fences`` on the raw ids, and the jnp random-access
+  decoders (``unpack_at``/``unpack_flat``) must agree with the numpy
+  inverse at every position;
+* the served index — a ``codec="packed"`` PartitionedIndex must
+  reproduce the uncompressed oracle EXACTLY (``rtol=0, atol=0``) through
+  qd_matrix, engine scores for every indexed retriever, first-stage
+  retrieve_topk and the Pallas interpreter, across K x tile, including
+  the Zipfian sub-sharded corpus.  ``packed-q8`` is lossy by design: its
+  ids stay bitwise, its values stay within the per-term scale bound and
+  its top-10 stays effective (the CI gate's floor).
+
+Plus the construction guards: packed layouts serve only at their baked
+tile, never under impl='jnp' or a mesh, and never re-encode silently.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from prophelpers import sweep
+from repro.core.codec import (CODECS, INT32_MAX, WIDTH_CLASSES, PackedIds,
+                              fences_from_packed, pack_doc_ids, pack_row,
+                              quantize_values, unpack_at, unpack_doc_ids,
+                              unpack_flat, unpack_row, validate_codec)
+from repro.core.index import build_fences, fence_count
+from repro.dist.partition import pack_index, unpack_index
+from repro.dist.sharding import partition_index
+from repro.retrievers import get_retriever
+from repro.serving import SeineEngine
+from test_partitioned_index import _adversarial_docs, _adversarial_queries
+
+K_SWEEP = (1, 2, 4)
+TILE_SWEEP = (64, 256, 1024)
+RETRIEVERS = ("knrm", "deeptilebars", "hint", "deepimpact")
+
+
+def _adversarial_rows(rng, k=3, n=700):
+    """(K, n) int32 rows exercising every width class: constant tiles
+    (0-bit), dense small spans (4/8-bit), sparse jumps (16-bit) and
+    near-INT32_MAX cliffs (32-bit), each row sorted like a posting row."""
+    rows = []
+    for _ in range(k):
+        parts = [np.full(97, rng.randint(0, 1000)),           # constant
+                 np.cumsum(rng.randint(0, 3, 150)),           # 4-bit deltas
+                 np.cumsum(rng.randint(0, 200, 150)),         # 8/16-bit
+                 np.cumsum(rng.randint(0, 70000, 100)),       # 32-bit spans
+                 INT32_MAX - np.arange(50)[::-1]]             # id cliff
+        row = np.sort(np.concatenate(parts).astype(np.int64))
+        row = np.clip(row, 0, INT32_MAX).astype(np.int32)[:n]
+        rows.append(np.pad(row, (0, max(0, n - row.shape[0])),
+                           constant_values=row[-1]))
+    return np.stack(rows)
+
+
+class TestPackRowRoundTrip:
+    def test_bitwise(self):
+        @sweep(TILE_SWEEP, n_seeds=3)
+        def prop(tile, seed):
+            rng = np.random.RandomState(seed)
+            row = _adversarial_rows(rng, k=1, n=517 + seed)[0]
+            words, bits, base, woff = pack_row(row, tile)
+            out = unpack_row(words, bits, base, woff, tile=tile,
+                             n=row.shape[0])
+            np.testing.assert_array_equal(out, row)
+            assert set(np.unique(bits)) <= set(WIDTH_CLASSES)
+
+        prop()
+
+    def test_constant_row_packs_to_zero_words(self):
+        row = np.full(256, 42, np.int32)
+        words, bits, base, woff = pack_row(row, 64)
+        assert (bits == 0).all() and words.shape[0] == 0
+        np.testing.assert_array_equal(
+            unpack_row(words, bits, base, woff, tile=64, n=256), row)
+
+    def test_tail_pad_never_widens_the_last_tile(self):
+        """A short tail is padded with the row's LAST value, so a 10-id
+        tail cannot force a 32-bit tile just because the pad would span."""
+        row = np.arange(64 + 10, dtype=np.int32)
+        _, bits, _, _ = pack_row(row, 64)
+        assert bits[1] <= 4
+        np.testing.assert_array_equal(
+            unpack_row(*pack_row(row, 64), tile=64, n=row.shape[0]), row)
+
+    def test_empty_row(self):
+        words, bits, base, woff = pack_row(np.empty(0, np.int32), 64)
+        assert bits.shape[0] == fence_count(0, 64) == 1
+        assert unpack_row(words, bits, base, woff, tile=64, n=0).shape == (0,)
+
+    def test_huge_ids_round_trip(self):
+        row = np.sort(np.array([0, 1, INT32_MAX - 1, INT32_MAX], np.int32))
+        np.testing.assert_array_equal(
+            unpack_row(*pack_row(row, 8), tile=8, n=4), row)
+
+    def test_rejects_tile_not_multiple_of_8(self):
+        with pytest.raises(ValueError, match="multiple of 8"):
+            pack_row(np.arange(10, dtype=np.int32), 100)
+
+
+class TestPackDocIds:
+    def test_stacked_bitwise(self):
+        @sweep(TILE_SWEEP, n_seeds=2)
+        def prop(tile, seed):
+            rows = _adversarial_rows(np.random.RandomState(seed))
+            p = pack_doc_ids(rows, tile)
+            assert isinstance(p, PackedIds)
+            np.testing.assert_array_equal(unpack_doc_ids(p), rows)
+            # the DMA window floor and the trailing zero pad it reads into
+            assert p.max_tile_words >= 8
+            assert p.packed_words.shape[1] >= p.max_tile_words
+
+        prop()
+
+    def test_compresses_dense_rows(self):
+        rows = np.cumsum(np.random.RandomState(0).randint(
+            0, 2, (2, 16384)), axis=1).astype(np.int32)
+        p = pack_doc_ids(rows, 256)
+        assert p.nbytes < rows.nbytes / 2.5
+
+    def test_rejects_non_stacked(self):
+        with pytest.raises(ValueError, match="stacked"):
+            pack_doc_ids(np.arange(16, dtype=np.int32), 8)
+
+
+class TestFencesFromPacked:
+    def test_matches_build_fences(self):
+        """Checkpoints drop the fences: rebuilding them from packed
+        metadata must equal build_fences on the raw ids, sentinel
+        included (fences past n are pinned at INT32_MAX)."""
+        @sweep(TILE_SWEEP, n_seeds=3)
+        def prop(tile, seed):
+            rows = _adversarial_rows(np.random.RandomState(seed),
+                                     n=3 * tile + 7)
+            p = pack_doc_ids(rows, tile)
+            got = fences_from_packed(p.tile_bits, p.tile_base,
+                                     p.tile_word_off, p.packed_words,
+                                     tile=tile, n=p.n)
+            want = np.asarray(build_fences(jnp.asarray(rows), tile))
+            np.testing.assert_array_equal(got, want)
+
+        prop()
+
+
+class TestUnpackAt:
+    def test_random_access_matches_numpy(self):
+        rng = np.random.RandomState(3)
+        rows = _adversarial_rows(rng, k=4, n=600)
+        p = pack_doc_ids(rows, 64)
+        k = jnp.asarray(rng.randint(0, 4, 200).astype(np.int32))
+        pos = jnp.asarray(rng.randint(0, 600, 200).astype(np.int32))
+        got = np.asarray(unpack_at(jnp.asarray(p.packed_words),
+                                   jnp.asarray(p.tile_bits),
+                                   jnp.asarray(p.tile_base),
+                                   jnp.asarray(p.tile_word_off),
+                                   k, pos, tile=64))
+        np.testing.assert_array_equal(got, rows[np.asarray(k),
+                                                np.asarray(pos)])
+
+    def test_flat_view_and_clipping(self):
+        rng = np.random.RandomState(4)
+        rows = _adversarial_rows(rng, k=2, n=300)
+        p = pack_doc_ids(rows, 64)
+        flat = rows.reshape(-1)
+        # out-of-range flat positions clip like .get(mode="clip") gathers
+        fp = jnp.asarray(np.array([0, 299, 300, 599, 600, 10_000, -5],
+                                  np.int32))
+        got = np.asarray(unpack_flat(jnp.asarray(p.packed_words),
+                                     jnp.asarray(p.tile_bits),
+                                     jnp.asarray(p.tile_base),
+                                     jnp.asarray(p.tile_word_off),
+                                     fp, tile=64, nmax=300))
+        np.testing.assert_array_equal(
+            got, flat[np.clip(np.asarray(fp), 0, flat.shape[0] - 1)])
+
+
+class TestQuantizeValues:
+    def test_error_bounded_by_per_term_scale(self):
+        rng = np.random.RandomState(5)
+        k, nmax, vmax = 2, 40, 6
+        offs = np.stack([np.linspace(0, nmax, vmax + 1).astype(np.int64)] * k)
+        vals = (rng.randn(k, nmax, 3, 2) * 10).astype(np.float32)
+        q, scale = quantize_values(vals, offs)
+        assert q.dtype == np.int8 and scale.shape == (k, vmax)
+        for i in range(k):
+            for t in range(vmax):
+                lo, hi = int(offs[i, t]), int(offs[i, t + 1])
+                err = np.abs(vals[i, lo:hi]
+                             - q[i, lo:hi].astype(np.float32) * scale[i, t])
+                assert err.max() <= scale[i, t] / 2 + 1e-7
+                assert scale[i, t] >= np.abs(vals[i, lo:hi]).max() / 127 - 1e-9
+
+    def test_zero_padding_and_empty_terms(self):
+        offs = np.array([[0, 2, 2, 2]], np.int64)    # term 1, 2 empty
+        vals = np.zeros((1, 5, 2, 2), np.float32)
+        vals[0, :2] = 3.0
+        q, scale = quantize_values(vals, offs)
+        assert (q[0, 2:] == 0).all()                  # pad rows quantise to 0
+        assert (scale[0, 1:] > 0).all()               # clamp floor, not 0
+
+
+class TestCodecValidation:
+    def test_known_codecs(self):
+        assert [validate_codec(c) for c in CODECS] == list(CODECS)
+        assert validate_codec(None) == "none"
+
+    def test_unknown_codec(self):
+        with pytest.raises(ValueError, match="unknown codec"):
+            validate_codec("zstd")
+
+    def test_pack_index_rejects_double_pack(self, seine_world):
+        p = partition_index(seine_world["index"], 2, codec="packed")
+        with pytest.raises(ValueError, match="already packed"):
+            pack_index(p, "packed-q8")
+
+    def test_unpack_index_restores_raw_layout(self, seine_world):
+        idx = seine_world["index"]
+        plain = partition_index(idx, 2)
+        packed = partition_index(idx, 2, codec="packed")
+        back = unpack_index(packed)
+        assert back.codec == "none" and back.packed_words is None
+        assert back.codec_tile == 0 and back.codec_spans == (0, 0)
+        np.testing.assert_array_equal(np.asarray(back.doc_ids),
+                                      np.asarray(plain.doc_ids))
+        np.testing.assert_array_equal(np.asarray(back.values),
+                                      np.asarray(plain.values))
+
+
+class TestPackedOracleParity:
+    """codec='packed' is lossless: every serve path must be BITWISE equal
+    to the uncompressed partitioned index (itself bitwise vs the single
+    CSR, so equality is transitive to the oracle)."""
+
+    def test_qd_matrix_bitwise_k_by_tile(self, seine_world):
+        w = seine_world
+        idx = w["index"]
+
+        @sweep(K_SWEEP, TILE_SWEEP, n_seeds=2)
+        def prop(k, tile, seed):
+            rng = np.random.RandomState(seed)
+            plain = partition_index(idx, k)
+            packed = partition_index(idx, k, codec="packed",
+                                     codec_tile=tile)
+            assert packed.doc_ids is None          # raw ids really dropped
+            assert packed.codec_tile == tile
+            docs = jnp.asarray(_adversarial_docs(idx, rng))
+            for q in _adversarial_queries(w, rng, n=2):
+                np.testing.assert_array_equal(
+                    np.asarray(packed.qd_matrix(jnp.asarray(q), docs)),
+                    np.asarray(plain.qd_matrix(jnp.asarray(q), docs)),
+                    err_msg=f"K={k} tile={tile}")
+
+        prop()
+
+    def test_engine_scores_all_retrievers(self, seine_world):
+        w = seine_world
+        idx = w["index"]
+        docs = jnp.arange(16)
+        for retriever in RETRIEVERS:
+            spec = get_retriever(retriever)
+            params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+            oracle = SeineEngine(idx, retriever, params)
+            ref = [np.asarray(oracle.score(jnp.asarray(q), docs))
+                   for q in w["queries"][:2]]
+            for k in K_SWEEP:
+                eng = SeineEngine(idx, retriever, params, partition="term",
+                                  n_shards=k, codec="packed")
+                assert eng.index.codec == "packed"
+                for i, q in enumerate(w["queries"][:2]):
+                    np.testing.assert_allclose(
+                        np.asarray(eng.score(jnp.asarray(q), docs)), ref[i],
+                        rtol=0, atol=0,
+                        err_msg=f"{retriever} K={k} query {i}")
+
+    def test_retrieve_topk_bitwise(self, seine_world):
+        w = seine_world
+        idx = w["index"]
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        plain = SeineEngine(idx, "knrm", params, partition="term",
+                            n_shards=2)
+        for k in K_SWEEP:
+            packed = SeineEngine(idx, "knrm", params, partition="term",
+                                 n_shards=k, codec="packed")
+            for q in w["queries"][:2]:
+                s0, d0 = plain.retrieve(jnp.asarray(q), 10)
+                s1, d1 = packed.retrieve(jnp.asarray(q), 10)
+                np.testing.assert_array_equal(np.asarray(d1),
+                                              np.asarray(d0),
+                                              err_msg=f"K={k}")
+                np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                           rtol=0, atol=0)
+
+    def test_zipfian_sub_sharded_packed(self, hot_term_index):
+        """The hot-term corpus: doc-range sub-shards + packed tiles
+        compose (split_doc fences cut mid-list, the packed row still
+        decodes the exact doc slice each sub-shard owns)."""
+        idx = hot_term_index
+        plain = partition_index(idx, 8)
+        packed = partition_index(idx, 8, codec="packed", codec_tile=64)
+        assert packed.split_term is not None
+        rng = np.random.RandomState(0)
+        q = jnp.asarray(np.array([0, 1, 17, -1, 45], np.int32))
+        docs = jnp.asarray(_adversarial_docs(idx, rng))
+        np.testing.assert_array_equal(
+            np.asarray(packed.qd_matrix(q, docs)),
+            np.asarray(plain.qd_matrix(q, docs)))
+
+    @pytest.mark.slow
+    def test_interpret_kernel_bitwise(self, seine_world):
+        """The packed Pallas kernel itself (interpret mode): in-tile
+        decode between the DMA and the bisect reproduces the raw-array
+        kernel bitwise.  One (K, tile) cell — the interpreter emulates
+        the grid cell-by-cell and is minutes-slow at full sweep width."""
+        w = seine_world
+        idx = w["index"]
+        rng = np.random.RandomState(0)
+        plain = partition_index(idx, 2)
+        packed = partition_index(idx, 2, codec="packed", codec_tile=64)
+        q = jnp.asarray(w["queries"][0])
+        docs = jnp.asarray(_adversarial_docs(idx, rng))
+        oracle = np.asarray(plain.qd_matrix(q, docs))
+        np.testing.assert_array_equal(
+            np.asarray(packed.qd_matrix(q, docs, impl="interpret")),
+            oracle, err_msg="packed pallas-interpret")
+
+
+class TestQ8Effectiveness:
+    def test_ids_bitwise_values_bounded(self, seine_world):
+        """q8 keeps the id plane lossless (same found mask, same packed
+        ids) and its value error within the per-term scale bound."""
+        idx = seine_world["index"]
+        plain = partition_index(idx, 2)
+        q8 = partition_index(idx, 2, codec="packed-q8")
+        assert q8.values is None and q8.values_q.dtype == jnp.int8
+        np.testing.assert_array_equal(
+            unpack_doc_ids(PackedIds(
+                np.asarray(q8.packed_words), np.asarray(q8.tile_bits),
+                np.asarray(q8.tile_base), np.asarray(q8.tile_word_off),
+                q8.max_tile_words, q8.codec_tile, q8.nmax)),
+            np.asarray(plain.doc_ids))
+        rng = np.random.RandomState(1)
+        q = jnp.asarray(seine_world["queries"][0])
+        docs = jnp.asarray(_adversarial_docs(idx, rng))
+        exact = np.asarray(plain.qd_matrix(q, docs))
+        approx = np.asarray(q8.qd_matrix(q, docs))
+        # identical sparsity pattern, values within one quantisation step
+        np.testing.assert_array_equal(approx != 0, exact != 0)
+        bound = float(np.asarray(q8.value_scale).max()) / 2 + 1e-6
+        assert np.abs(approx - exact).max() <= bound
+
+    def test_recall_at_10(self, seine_world):
+        w = seine_world
+        idx = w["index"]
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        exact = SeineEngine(idx, "knrm", params, partition="term",
+                            n_shards=2)
+        q8 = SeineEngine(idx, "knrm", params, partition="term",
+                         n_shards=2, codec="packed-q8")
+        hits = total = 0
+        for q in w["queries"][:4]:
+            _, d0 = exact.retrieve(jnp.asarray(q), 10)
+            _, d1 = q8.retrieve(jnp.asarray(q), 10)
+            hits += len(set(np.asarray(d0).tolist())
+                        & set(np.asarray(d1).tolist()))
+            total += 10
+        assert hits / total >= 0.9, f"q8 recall@10 {hits / total:.2f}"
+
+
+class TestCkptRoundTrip:
+    def _round_trip(self, pidx, tmp_path, name):
+        from repro.ckpt import load_index, save_index
+        d = save_index(str(tmp_path / name), pidx)
+        r = load_index(d)
+        for field in ("codec", "codec_tile", "max_tile_words",
+                      "codec_spans", "n_shards"):
+            assert getattr(r, field) == getattr(pidx, field), field
+        for field in ("term_offsets", "packed_words", "tile_bits",
+                      "tile_base", "tile_word_off", "values", "values_q",
+                      "value_scale", "fences", "split_term", "split_doc"):
+            a, b = getattr(pidx, field), getattr(r, field)
+            if a is None:
+                assert b is None, field
+            else:
+                np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                              err_msg=field)
+        return r
+
+    def test_packed_bitwise(self, seine_world, tmp_path):
+        idx = seine_world["index"]
+        p = partition_index(idx, 2, codec="packed", codec_tile=64)
+        r = self._round_trip(p, tmp_path, "packed")
+        q = jnp.asarray(seine_world["queries"][0])
+        docs = jnp.asarray(np.arange(0, idx.n_docs, 3, dtype=np.int32))
+        np.testing.assert_array_equal(np.asarray(r.qd_matrix(q, docs)),
+                                      np.asarray(p.qd_matrix(q, docs)))
+
+    def test_q8_bitwise(self, seine_world, tmp_path):
+        p = partition_index(seine_world["index"], 2, codec="packed-q8")
+        self._round_trip(p, tmp_path, "q8")
+
+    def test_old_dir_recovery(self, seine_world, tmp_path):
+        """A writer preempted mid-overwrite leaves <dir>.old<pid>;
+        load_index must restore the packed index from it."""
+        from repro.ckpt import load_index, save_index
+        p = partition_index(seine_world["index"], 2, codec="packed")
+        d = save_index(str(tmp_path / "idx"), p)
+        os.replace(d, d + ".old99999")              # simulate the crash
+        r = load_index(d)
+        assert r.codec == "packed"
+        np.testing.assert_array_equal(np.asarray(r.packed_words),
+                                      np.asarray(p.packed_words))
+
+    def test_legacy_npz_loads_as_none(self, seine_world, tmp_path):
+        """An uncompressed save IS the legacy format (codec keys are only
+        written for packed indexes): it must restore codec='none' with
+        every packed sidecar absent."""
+        import json
+
+        from repro.ckpt import load_index, save_index
+        p = partition_index(seine_world["index"], 2)
+        d = save_index(str(tmp_path / "legacy"), p)
+        with open(os.path.join(d, "index_manifest.json")) as f:
+            manifest = json.load(f)
+        assert "codec" not in manifest
+        r = load_index(d)
+        assert r.codec == "none" and r.codec_tile == 0
+        assert r.packed_words is None and r.values_q is None
+        np.testing.assert_array_equal(np.asarray(r.doc_ids),
+                                      np.asarray(p.doc_ids))
+
+
+class TestConstructionGuards:
+    def test_packed_rejects_tile_override(self, seine_world):
+        p = partition_index(seine_world["index"], 2, codec="packed",
+                            codec_tile=64)
+        q = jnp.asarray(seine_world["queries"][0])
+        docs = jnp.arange(8)
+        with pytest.raises(ValueError, match="does not match"):
+            p.qd_matrix(q, docs, tile=256)
+        np.asarray(p.qd_matrix(q, docs, tile=64))   # matching tile is fine
+
+    def test_packed_rejects_jnp_impl(self, seine_world):
+        p = partition_index(seine_world["index"], 2, codec="packed")
+        q = jnp.asarray(seine_world["queries"][0])
+        with pytest.raises(ValueError, match="impl='jnp'"):
+            p.qd_matrix(q, jnp.arange(8), impl="jnp")
+        with pytest.raises(ValueError, match="impl='jnp'"):
+            p.lookup_pairs(q[None], jnp.arange(1), impl="jnp")
+
+    def test_engine_codec_needs_term_partition(self, seine_world):
+        idx = seine_world["index"]
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        with pytest.raises(ValueError, match="partition='term'"):
+            SeineEngine(idx, "knrm", params, codec="packed")
+
+    def test_engine_rejects_codec_conflict(self, seine_world):
+        idx = seine_world["index"]
+        p = partition_index(idx, 2, codec="packed")
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        with pytest.raises(ValueError, match="conflicts"):
+            SeineEngine(p, "knrm", params, codec="packed-q8")
+        # same codec re-stated is not a conflict
+        SeineEngine(p, "knrm", params, codec="packed")
+
+    def test_engine_rejects_mesh_with_packed(self, seine_world):
+        from repro.launch.mesh import make_host_mesh
+        idx = seine_world["index"]
+        p = partition_index(idx, 1, codec="packed")
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        with pytest.raises(ValueError, match="mesh"):
+            SeineEngine(p, "knrm", params,
+                        mesh=make_host_mesh(data=len(jax.devices())))
+
+    def test_engine_rejects_lookup_tile_mismatch(self, seine_world):
+        idx = seine_world["index"]
+        p = partition_index(idx, 2, codec="packed", codec_tile=64)
+        spec = get_retriever("knrm")
+        params = spec.init(jax.random.key(0), idx.n_b, idx.functions)
+        with pytest.raises(ValueError, match="codec tile"):
+            SeineEngine(p, "knrm", params, lookup_tile=256)
