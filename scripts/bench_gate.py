@@ -32,6 +32,20 @@ Three more read BENCH_compressed.json (the in-kernel codec claims):
 * ``q8_effectiveness_gate`` — packed retrieval ranking exactly matches
                         uncompressed; packed-q8 recall@10 >= 0.9.
 
+One more reads BENCH_frontend.json (the async serving front end):
+
+* ``p95_gate``        — open-loop Poisson p95 latency under the
+                        coalesced and coalesced+cached front ends must
+                        improve on the naive per-query front end by the
+                        bench's floor (discounted by its naive-vs-naive2
+                        measured noise floor; see
+                        benchmarks/bench_frontend.py).  The per-path
+                        ``p95_ms``/``p50_ms``/``queue_ms`` numbers also
+                        ride the relative baseline comparison below —
+                        open-loop tails are jittery, which is exactly
+                        what the median-timing-ratio normalization is
+                        for.
+
 Metric classification is by key name, applied recursively over each
 JSON's nested dicts (list indices become path segments):
 
@@ -74,7 +88,7 @@ from typing import Iterator, List, Tuple
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = ("BENCH_partitioned.json", "BENCH_serve.json",
                "BENCH_build.json", "BENCH_retrieval.json",
-               "BENCH_compressed.json")
+               "BENCH_compressed.json", "BENCH_frontend.json")
 DEFAULT_THRESHOLD = 1.3
 
 EXIT_PASS, EXIT_FAIL, EXIT_MISSING = 0, 1, 3
@@ -277,6 +291,29 @@ def check_compressed_gates(comp: dict) -> bool:
     return ok
 
 
+def check_frontend_gate(front: dict) -> bool:
+    """The absolute gate recorded by benchmarks/bench_frontend: under
+    open-loop Poisson load at the benched QPS, the coalesced and the
+    coalesced+cached front ends must improve p95 latency on the naive
+    per-query front end by the bench's floor (discounted by the
+    naive-vs-naive2 control's measured noise floor)."""
+    gate = front.get("p95_gate")
+    if gate is None:
+        print("frontend p95 gate: MISSING from BENCH_frontend.json")
+        return False
+    per = " ".join(
+        f"{name}:[ratio={g['ratio']:.2f} (floor "
+        f"{g['effective_floor']:.3f} = {g['floor']:g}x / noise "
+        f"{g['noise_floor']:.3f})]"
+        for name, g in sorted(gate["per_path"].items()))
+    goodput = " ".join(
+        f"{name}:{p['goodput']:.3f}"
+        for name, p in sorted(front.get("paths", {}).items()))
+    print(f"frontend p95 gate [{gate['metric']}]: {per} "
+          f"goodput {goodput} -> pass={gate['pass']}")
+    return bool(gate["pass"])
+
+
 def print_shard_balance(obs_path: str) -> None:
     """Per-shard balance gauges from the bench run's obs snapshot
     (OBS_bench.json, written by ``benchmarks.run --obs-out``).  Purely
@@ -375,6 +412,19 @@ def main(argv=None) -> int:
             ok &= check_compressed_gates(json.load(f))
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read {comp_path}: {e} "
+              f"(exit code {EXIT_MISSING})")
+        return EXIT_MISSING
+
+    front_path = os.path.join(REPO_ROOT, "BENCH_frontend.json")
+    if not os.path.exists(front_path):
+        print(f"bench gate: {front_path} is missing — did the frontend "
+              f"suite run? (exit code {EXIT_MISSING}, not a regression)")
+        return EXIT_MISSING
+    try:
+        with open(front_path) as f:
+            ok &= check_frontend_gate(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {front_path}: {e} "
               f"(exit code {EXIT_MISSING})")
         return EXIT_MISSING
     print_shard_balance(args.obs_snapshot)

@@ -15,16 +15,18 @@
 #                           dist-substrate, partitioned-serving (fused vs
 #                           jnp grid + the Zipfian sub-shard corpus),
 #                           legacy-vs-streaming build, first-stage
-#                           retrieval and compressed-codec benchmarks,
-#                           emitting BENCH_partitioned.json,
-#                           BENCH_serve.json, BENCH_build.json,
-#                           BENCH_retrieval.json and
-#                           BENCH_compressed.json; then
+#                           retrieval, compressed-codec and open-loop
+#                           serving-frontend benchmarks, emitting
+#                           BENCH_partitioned.json, BENCH_serve.json,
+#                           BENCH_build.json, BENCH_retrieval.json,
+#                           BENCH_compressed.json and
+#                           BENCH_frontend.json; then
 #                           scripts/bench_gate.py (1) re-checks the
 #                           absolute gates (fused K=2 lookup <=
 #                           replicated jnp; zipf bytes_shrink >= 0.8*K;
 #                           retrieval recall@10 == 1.0 on every path;
-#                           codec latency/shrink/effectiveness),
+#                           codec latency/shrink/effectiveness; frontend
+#                           open-loop p95 improvement vs naive),
 #                           and (2) compares EVERY BENCH_*.json metric
 #                           against the committed baseline (snapshotted
 #                           from HEAD before the run), failing on >1.3x
@@ -62,7 +64,7 @@ case "${1:-full}" in
          trap 'rm -rf "$baseline_dir"' EXIT
          for f in BENCH_partitioned.json BENCH_serve.json \
                   BENCH_build.json BENCH_retrieval.json \
-                  BENCH_compressed.json; do
+                  BENCH_compressed.json BENCH_frontend.json; do
            git show "HEAD:$f" > "$baseline_dir/$f" 2>/dev/null || \
              rm -f "$baseline_dir/$f"
          done
@@ -70,7 +72,7 @@ case "${1:-full}" in
          # balance, build counters, span timings) — uploaded next to the
          # BENCH_*.json artifacts; bench_gate prints its balance gauges
          python -m benchmarks.run \
-           --only dist,partitioned,index_build,retrieval,compressed \
+           --only dist,partitioned,index_build,retrieval,compressed,frontend \
            --obs-out OBS_bench.json
          # no exec: the EXIT trap must still fire to clean the snapshot
          python scripts/bench_gate.py --baseline-dir "$baseline_dir"

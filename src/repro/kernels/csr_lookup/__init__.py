@@ -1,11 +1,13 @@
-from .ops import (csr_lookup, csr_lookup_packed_ref, csr_lookup_ref,
-                  csr_retrieve_block, csr_retrieve_topk, lookup_pairs_ref,
-                  merge_windows, packed_bisect, retrieve_block_packed_ref,
-                  retrieve_block_ref, retrieve_lanes, route_pairs,
-                  route_terms)
+from .ops import (cached_tile_lookup, csr_lookup, csr_lookup_packed_ref,
+                  csr_lookup_ref, csr_retrieve_block, csr_retrieve_topk,
+                  fill_tile_cache, gather_tiles, gather_tiles_packed,
+                  lookup_pairs_ref, merge_windows, packed_bisect,
+                  retrieve_block_packed_ref, retrieve_block_ref,
+                  retrieve_lanes, route_pairs, route_terms)
 
-__all__ = ["csr_lookup", "csr_lookup_packed_ref", "csr_lookup_ref",
-           "csr_retrieve_block", "csr_retrieve_topk", "lookup_pairs_ref",
-           "merge_windows", "packed_bisect", "retrieve_block_packed_ref",
-           "retrieve_block_ref", "retrieve_lanes", "route_pairs",
-           "route_terms"]
+__all__ = ["cached_tile_lookup", "csr_lookup", "csr_lookup_packed_ref",
+           "csr_lookup_ref", "csr_retrieve_block", "csr_retrieve_topk",
+           "fill_tile_cache", "gather_tiles", "gather_tiles_packed",
+           "lookup_pairs_ref", "merge_windows", "packed_bisect",
+           "retrieve_block_packed_ref", "retrieve_block_ref",
+           "retrieve_lanes", "route_pairs", "route_terms"]

@@ -29,10 +29,11 @@ import numpy as np
 
 from .kernel import (csr_lookup_packed_pallas, csr_lookup_pallas,
                      retrieve_windows_packed_pallas, retrieve_windows_pallas)
-from .ref import (bisect_steps, csr_lookup_packed_ref, csr_lookup_ref,
-                  lookup_pairs_ref, merge_windows, packed_bisect,
-                  retrieve_block_packed_ref, retrieve_block_ref,
-                  retrieve_lanes, route_pairs, route_terms, _lane_scale)
+from .ref import (bisect_steps, cached_tile_lookup, csr_lookup_packed_ref,
+                  csr_lookup_ref, lookup_pairs_ref, merge_windows,
+                  packed_bisect, retrieve_block_packed_ref,
+                  retrieve_block_ref, retrieve_lanes, route_pairs,
+                  route_terms, _lane_scale)
 
 
 def _check_packed_args(codec, packed, fences, values, tile, t):
@@ -443,8 +444,67 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     return jax.lax.fori_loop(0, n_blocks, body, init)
 
 
-__all__ = ["csr_lookup", "csr_lookup_packed_ref", "csr_lookup_ref",
-           "csr_retrieve_block", "csr_retrieve_topk",
+# ---------------------------------------------------------------------------
+# posting-tile cache fetch/fill (serving.tile_cache.PostingTileCache)
+# ---------------------------------------------------------------------------
+
+# the in-cache pair resolution is the front end's hot path — jit the ref
+# here (CPU and TPU share the expression: it is pure gathers + the
+# branchless bisect, no DMA staging to specialise)
+cached_tile_lookup = jax.jit(cached_tile_lookup)
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def gather_tiles(doc_ids, values, rows, starts, *, tile: int):
+    """Fetch raw posting tiles for the serving tile cache.
+
+    ``rows`` (M,) shard indices x ``starts`` (M,) tile-aligned shard-local
+    positions -> ``((M, tile) doc ids, (M, tile, n_b, n_f) values)``.
+    Positions past the row tail clip-gather the last element — the padded
+    doc id (``>= n_docs``, monotone), so every fetched tile stays sorted
+    and the per-pair windows (clipped to the routed range before the
+    in-tile bisect) never consult the duplicates.
+    """
+    n = doc_ids.shape[1]
+    pos = (starts[:, None]
+           + jnp.arange(tile, dtype=jnp.int32)[None, :]).clip(0, n - 1)
+    r = rows[:, None]
+    return doc_ids[r, pos], values[r, pos]
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def gather_tiles_packed(packed, values, rows, starts, *, tile: int):
+    """Packed-codec :func:`gather_tiles`: tile doc ids decode through
+    :func:`~repro.core.codec.unpack_at` (one metadata gather per tile row,
+    amortised over the whole tile), values gather from the serve payload
+    (f32 under ``packed``, int8 under ``packed-q8`` — the cache keeps the
+    storage dtype and dequantises at lookup).  In-tile positions past a
+    short tail decode the pack-time pad (the row's last id), which keeps
+    the fetched tile sorted exactly like the raw path's clip-gather."""
+    from ...core.codec import unpack_at
+
+    n = values.shape[1]
+    pos = starts[:, None] + jnp.arange(tile, dtype=jnp.int32)[None, :]
+    ids = unpack_at(*packed, rows[:, None], pos, tile=tile)
+    r = rows[:, None]
+    return ids, values[r, pos.clip(0, n - 1)]
+
+
+@jax.jit
+def fill_tile_cache(cache_ids, cache_vals, new_ids, new_vals, slots):
+    """Write freshly-fetched tiles into cache slots (functional update).
+
+    ``slots`` (M,) int32 — rows of ``new_ids``/``new_vals`` land at
+    ``cache_{ids,vals}[slots]``; the cache capacity C is the drop
+    sentinel (``mode="drop"``), so padding the fetch batch to a bucketed
+    shape costs nothing and can never clobber a live slot."""
+    return (cache_ids.at[slots].set(new_ids, mode="drop"),
+            cache_vals.at[slots].set(new_vals, mode="drop"))
+
+
+__all__ = ["cached_tile_lookup", "csr_lookup", "csr_lookup_packed_ref",
+           "csr_lookup_ref", "csr_retrieve_block", "csr_retrieve_topk",
+           "fill_tile_cache", "gather_tiles", "gather_tiles_packed",
            "lookup_pairs_ref", "merge_windows", "packed_bisect",
            "retrieve_block_packed_ref", "retrieve_block_ref",
            "retrieve_lanes", "route_pairs", "route_terms"]

@@ -522,3 +522,57 @@ def retrieve_block_packed_ref(term_offsets, packed, fences, values,
         scale = _lane_scale(value_scale, range_lo, ks, query_terms[:, None])
         val_win = val_win.astype(jnp.float32) * scale[..., None, None, None]
     return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
+
+
+# ---------------------------------------------------------------------------
+# posting-tile cache (serving front end's hot-term cache, serving/tile_cache)
+# ---------------------------------------------------------------------------
+
+def cached_tile_lookup(cache_ids, cache_vals, slots, win_lo, win_hi,
+                       doc_targets, scale=None):
+    """Resolve (term, doc) pairs against cached posting tiles.
+
+    The front end's tile cache (``serving.tile_cache.PostingTileCache``)
+    routes pairs on the host — the owning shard, the posting range and
+    the single tile that can contain the target are all computable from
+    the replicated O(|v|)/O(K) tables plus the fence rows, none of the
+    posting payload — so by the time this runs, every pair has been
+    reduced to an in-tile bisect over one cached ``T``-wide tile:
+
+    * ``cache_ids`` (C, T) int32 — resident tiles' doc ids (decoded,
+      even under a packed codec: the cache stores tiles post-decode so
+      hits skip the unpack as well as the DMA);
+    * ``cache_vals`` (C, T, n_b, n_f) — the matching value rows, at the
+      index's serve dtype (f32, or int8 under packed-q8);
+    * ``slots`` / ``win_lo`` / ``win_hi`` (...,) int32 per pair — the
+      pair's cache slot and its routed range clipped to that tile
+      (shard-local ``[lo, hi)`` minus the tile base).  Pairs with no
+      postings (OOV / padding / empty route) pass ``win_lo == win_hi``
+      and resolve to the exact-zero rows every lookup path shares;
+    * ``scale`` (...,) f32 — per-pair dequant scale (packed-q8 only).
+
+    The bisect is ``core.index._bisect`` over the flattened cache with a
+    per-pair base of ``slot * T`` — the identical probe sequence the
+    uncompressed ref runs over ``doc_ids.reshape(K * N)`` restricted to
+    one tile, so found masks and values are bitwise-equal to the
+    uncoalesced oracle (``bisect_steps(T)`` iterations suffice: the
+    window is at most ``T`` wide).
+    """
+    from ...core.index import _bisect
+
+    c, t = cache_ids.shape
+    flat = cache_ids.reshape(-1)
+    base = slots * t
+    lo = base + win_lo
+    hi = base + win_hi
+    pos = _bisect(flat, lo, hi, doc_targets, n_iter=bisect_steps(t))
+    found = (pos < hi) & (flat.at[pos].get(mode="clip") == doc_targets)
+    vals = cache_vals.reshape((c * t,) + cache_vals.shape[2:]) \
+        .at[pos].get(mode="clip")
+    if scale is not None:
+        # int8 dequant fused into the gather consumer, mirroring
+        # _lookup_packed's q8 tail (same select-over-mask policy)
+        return jnp.where(found[..., None, None],
+                         vals.astype(jnp.float32) * scale[..., None, None],
+                         0.0)
+    return jnp.where(found[..., None, None], vals, 0.0)

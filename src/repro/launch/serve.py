@@ -10,6 +10,15 @@ the term-range PartitionedIndex (no replicated CSR skeleton) instead of
 the replicated-skeleton shard_index placement.  ``--retrieve-k K``
 switches to first-stage mode: no candidate sets — each query walks the
 index and returns its corpus-wide top-K (``SeineEngine.retrieve``).
+
+``--target-qps Q`` switches to OPEN-LOOP mode: requests arrive on a
+Poisson timeline through the async ``ServingFrontend`` (admission
+queue, continuous batching, optional ``--slo-ms`` load shedding) and
+the report adds goodput — the view closed-loop min-latency runs can't
+give.  ``--coalesce`` dedupes (term, doc) pairs across the formed
+batch and ``--cache-tiles N`` serves hot posting tiles from a
+device-resident cache; both are exact (scores bitwise-equal to the
+per-request path).
 """
 from __future__ import annotations
 
@@ -63,6 +72,34 @@ def main() -> None:
                     help="write the obs metrics snapshot here after "
                          "serving: Prometheus text exposition, or a JSON "
                          "snapshot when the path ends in .json")
+    ap.add_argument("--target-qps", type=float, default=0.0,
+                    help="open-loop mode: submit requests on a Poisson "
+                         "timeline at this rate through the async "
+                         "ServingFrontend and report goodput alongside "
+                         "latency quantiles (0 = closed-loop serve_batches "
+                         "as before; mesh-less only)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="open-loop SLO: requests aged past this in the "
+                         "queue are rejected unserved (counted in "
+                         "seine_serve_slo_misses_total) and goodput is the "
+                         "fraction served within it (0 = no SLO)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="open-loop batch size target: a forming batch "
+                         "closes as soon as it holds this many requests")
+    ap.add_argument("--batch-timeout-ms", type=float, default=2.0,
+                    help="open-loop batch time budget: a forming batch "
+                         "closes this many ms after its first request "
+                         "even if below --max-batch")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="open-loop: dedupe (term, doc) pairs shared "
+                         "across the formed batch's queries — one routed "
+                         "bisect + one tile fetch per DISTINCT pair, "
+                         "scattered back per query (exact)")
+    ap.add_argument("--cache-tiles", type=int, default=0,
+                    help="open-loop: device-resident LRU cache budget in "
+                         "posting tiles, serving hot tiles without "
+                         "re-fetch/re-decode (requires --coalesce and "
+                         "--partition term; 0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -72,8 +109,8 @@ def main() -> None:
     from ..data.batching import candidates_for_query, pad_queries
     from ..data.synth_corpus import generate
     from ..retrievers import get_retriever
-    from ..serving import (NoIndexEngine, SeineEngine, serve_batches,
-                           serve_retrieval)
+    from ..serving import (NoIndexEngine, SeineEngine, ServingFrontend,
+                           run_open_loop, serve_batches, serve_retrieval)
 
     if args.retrieve_k and args.data_parallel:
         ap.error("--retrieve-k is mesh-less only (the scan's segment "
@@ -86,6 +123,36 @@ def main() -> None:
     if args.codec != "none" and args.data_parallel:
         ap.error("--codec is mesh-less only (the SPMD partial-sum lookup "
                  "has no packed lowering); drop --data-parallel")
+    if args.target_qps < 0:
+        ap.error(f"--target-qps must be >= 0, got {args.target_qps}")
+    if args.target_qps and args.data_parallel:
+        ap.error("--target-qps (open-loop frontend) is mesh-less only; "
+                 "drop --data-parallel")
+    if args.target_qps and args.retrieve_k:
+        ap.error("--target-qps serves candidate re-scoring; drop "
+                 "--retrieve-k")
+    if args.slo_ms < 0:
+        ap.error(f"--slo-ms must be >= 0, got {args.slo_ms}")
+    if args.cache_tiles < 0:
+        ap.error(f"--cache-tiles must be >= 0, got {args.cache_tiles}")
+    if args.cache_tiles and not args.coalesce:
+        ap.error("--cache-tiles requires --coalesce (the tile cache "
+                 "serves the coalesced distinct-pair lookup)")
+    if args.cache_tiles and args.partition != "term":
+        ap.error("--cache-tiles requires --partition term (the cache "
+                 "keys on the PartitionedIndex's (shard, tile) layout)")
+    if (args.coalesce or args.slo_ms or args.max_batch != 8
+            or args.batch_timeout_ms != 2.0) and not args.target_qps:
+        ap.error("--coalesce/--cache-tiles/--slo-ms/--max-batch/"
+                 "--batch-timeout-ms shape the open-loop frontend; add "
+                 "--target-qps QPS to enable it")
+    if args.metrics_out:
+        # fail now with a clear message, not a FileNotFoundError stack
+        # trace after minutes of index build + serving
+        import os
+        out_dir = os.path.dirname(os.path.abspath(args.metrics_out))
+        if not os.path.isdir(out_dir):
+            ap.error(f"--metrics-out directory does not exist: {out_dir}")
 
     cfg = seine_smoke()
     ds = generate(cfg, seed=args.seed)
@@ -167,6 +234,9 @@ def main() -> None:
         _, stats = serve_retrieval(engine, qs, args.retrieve_k)  # warm
         hb.beat(0)
         results, stats = serve_retrieval(engine, qs, args.retrieve_k)
+        hb.beat(0)  # final beat AFTER the loop drains, so the age gauge
+        #             in the snapshot reflects a live rank, not the
+        #             whole measured loop's duration
         hb.dead_ranks()
         _log.info("SEINE first-stage",
                   ms_per_request=f"{stats.ms_per_request:.2f}",
@@ -178,11 +248,44 @@ def main() -> None:
             obs.write_metrics(args.metrics_out)
             _log.info("metrics written", path=args.metrics_out)
         return
+    if args.target_qps:
+        from ..serving import ServeStats
+        frontend = ServingFrontend(
+            engine, max_batch=args.max_batch,
+            batch_timeout_ms=args.batch_timeout_ms,
+            batch_pad=args.batch_pad, slo_ms=args.slo_ms or None,
+            coalesce=args.coalesce, cache_tiles=args.cache_tiles)
+        # warm the jit caches off the clock (compiles would dominate
+        # every quantile at smoke scale), then measure on fresh stats
+        for q, d in requests[:args.max_batch]:
+            frontend.submit(q, d).result()
+        frontend.stats = ServeStats()
+        res = run_open_loop(frontend, requests,
+                            target_qps=args.target_qps, seed=args.seed)
+        frontend.close()  # drains every admitted request
+        hb.beat(0)        # final beat lands AFTER the drain, so the
+        #                   snapshot's age gauge reflects a live rank
+        hb.dead_ranks()
+        stats = res.stats
+        _log.info("SEINE open-loop",
+                  target_qps=args.target_qps,
+                  served=res.n_served, rejected=res.n_rejected,
+                  goodput=f"{res.goodput:.3f}",
+                  ms_per_request=f"{stats.ms_per_request:.2f}",
+                  p50=f"{stats.p50_ms:.2f}", p95=f"{stats.p95_ms:.2f}",
+                  queue_ms=f"{stats.queue_ms_per_request:.2f}",
+                  max_queue_depth=stats.max_queue_depth,
+                  coalesce=args.coalesce, cache_tiles=args.cache_tiles)
+        if args.metrics_out:
+            obs.write_metrics(args.metrics_out)
+            _log.info("metrics written", path=args.metrics_out)
+        return
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)  # warm + measure
     hb.beat(0)
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)
+    hb.beat(0)  # final beat AFTER the measured loop drains (see above)
     hb.dead_ranks()                      # records heartbeat-age gauges
     _log.info("SEINE", ms_per_request=f"{stats.ms_per_request:.2f}",
               p50=f"{stats.p50_ms:.2f}", p95=f"{stats.p95_ms:.2f}",

@@ -74,6 +74,19 @@ seine_serve_latency_ms                histogram per-request serve latency
 seine_serve_slots_total               counter   real candidate slots scored
 seine_serve_pad_slots_total           counter   padded candidate slots
 seine_serve_pad_waste_ratio           gauge     pad / (pad + real) slots
+seine_frontend_requests_total         counter   requests admitted to queue
+seine_frontend_batches_total          counter   batches formed and served
+seine_serve_queue_wait_ms             histogram admission-to-dequeue wait
+seine_serve_queue_depth               gauge     queue depth at batch form
+seine_serve_slo_misses_total          counter   requests rejected past SLO
+seine_coalesce_pair_slots_total       counter   pre-dedupe pair slots
+seine_coalesce_distinct_pairs_total   counter   distinct pairs looked up
+seine_coalesce_dedupe_ratio           gauge     distinct / submitted slots
+seine_tile_cache_hits_total           counter   tiles served from cache
+seine_tile_cache_misses_total         counter   tiles fetched on miss
+seine_tile_cache_evictions_total      counter   tiles evicted (LRU)
+seine_tile_cache_overflow_pairs_total counter   pairs spilled past budget
+seine_tile_cache_size_tiles           gauge     tiles resident in cache
 seine_lookup_found_ratio              gauge     found-mask hit rate (sampled)
 seine_lookup_found_total              counter   found pairs (sampled)
 seine_lookup_pairs_sampled_total      counter   looked-up pairs (sampled)

@@ -10,6 +10,7 @@ serving driver used by launch/serve.py.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -463,34 +464,72 @@ class ServeStats:
     """Per-request latency record.  The mean alone hides tail latency under
     data-parallel serving (one straggler device stretches every request it
     shares a batch with), so p50/p95 quantiles are reported alongside it.
-    ``record`` is the single writer: count/total are O(1) running scalars,
-    and ``latencies_ms`` is a deque keeping only the most recent ``window``
-    samples, so a long-lived serving loop gets recent-window quantiles at
-    bounded memory and O(1) per-request cost (a full-history ServeStats
-    would grow forever at production rates)."""
+    count/total are O(1) running scalars, and ``latencies_ms`` is a deque
+    keeping only the most recent ``window`` samples, so a long-lived
+    serving loop gets recent-window quantiles at bounded memory and O(1)
+    per-request cost (a full-history ServeStats would grow forever at
+    production rates).
+
+    Thread safety: the async front end records from its worker thread
+    while the submitting thread reads quantiles, so ``record`` /
+    ``note_queue_depth`` and the sorted-snapshot cache take an internal
+    lock — without it a read mid-record could sort a deque whose running
+    count it then caches against, pinning a stale snapshot forever.
+
+    Queue instrumentation (continuous batching): ``record`` takes an
+    optional ``queue_ms`` (admission-to-dequeue wait, also exported as
+    the ``seine_serve_queue_wait_ms`` histogram) and the front end calls
+    ``note_queue_depth`` per batch so ``max_queue_depth`` tracks the
+    high-water mark."""
     latencies_ms: Sequence[float] = field(default_factory=list)
     window: int = 1 << 16
+    queue_depth: int = 0
+    max_queue_depth: int = 0
     _n: int = 0
     _total_ms: float = 0.0
+    _queue_n: int = 0
+    _queue_total_ms: float = 0.0
     _snap: Optional[np.ndarray] = field(default=None, repr=False)
     _snap_n: int = -1
 
     def __post_init__(self):
         self.latencies_ms = deque(self.latencies_ms, maxlen=self.window)
-        # family object cached once: obs.reset() clears samples but keeps
-        # registered families, so the handle stays valid for the stats
+        self._lock = threading.Lock()
+        # family objects cached once: obs.reset() clears samples but keeps
+        # registered families, so the handles stay valid for the stats
         # object's whole life
         self._hist = obs.histogram("seine_serve_latency_ms",
                                    "per-request serve latency (ms)")
+        self._qhist = obs.histogram(
+            "seine_serve_queue_wait_ms",
+            "admission-to-dequeue wait in the serving queue (ms)")
+        self._depth_gauge = obs.gauge(
+            "seine_serve_queue_depth",
+            "admission queue depth at batch formation")
 
-    def record(self, ms: float) -> None:
-        self._n += 1
-        self._total_ms += ms
-        self.latencies_ms.append(ms)
-        # dual-write: the obs histogram is the exported surface (Prometheus
-        # buckets, JSON snapshot); the deque keeps exact recent-window
-        # quantiles for in-process reporting
-        self._hist.observe(ms)
+    def record(self, ms: float, queue_ms: Optional[float] = None) -> None:
+        # the obs writes stay inside the lock: metric samples are plain
+        # dict read-modify-writes, unsafe under concurrent recorders
+        with self._lock:
+            self._n += 1
+            self._total_ms += ms
+            self.latencies_ms.append(ms)
+            if queue_ms is not None:
+                self._queue_n += 1
+                self._queue_total_ms += queue_ms
+            # dual-write: the obs histogram is the exported surface
+            # (Prometheus buckets, JSON snapshot); the deque keeps exact
+            # recent-window quantiles for in-process reporting
+            self._hist.observe(ms)
+            if queue_ms is not None:
+                self._qhist.observe(queue_ms)
+
+    def note_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            self.queue_depth = int(depth)
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = int(depth)
+            self._depth_gauge.set(depth)
 
     @property
     def n_requests(self) -> int:
@@ -504,16 +543,24 @@ class ServeStats:
     def ms_per_request(self) -> float:
         return self._total_ms / max(self._n, 1)
 
+    @property
+    def queue_ms_per_request(self) -> float:
+        with self._lock:
+            return self._queue_total_ms / max(self._queue_n, 1)
+
     def _sorted_ms(self) -> np.ndarray:
         """Sorted snapshot of the recent-window samples, cached per
         record() count: a p50+p95 report used to materialise and sort
         the (up to 64k-sample) deque twice per read — now any number of
-        quantile reads between two records share one O(n log n) sort."""
-        if self._snap is None or self._snap_n != self._n:
-            self._snap = np.sort(np.asarray(self.latencies_ms,
-                                            dtype=np.float64))
-            self._snap_n = self._n
-        return self._snap
+        quantile reads between two records share one O(n log n) sort.
+        Snapshot + count are read under the lock so a concurrent record
+        can't interleave between the deque copy and the count cache."""
+        with self._lock:
+            if self._snap is None or self._snap_n != self._n:
+                self._snap = np.sort(np.asarray(self.latencies_ms,
+                                                dtype=np.float64))
+                self._snap_n = self._n
+            return self._snap
 
     def percentile_ms(self, q: float) -> float:
         if not self.latencies_ms:

@@ -153,7 +153,8 @@ class TestGateCli:
     """End-to-end exit-code contract of the gate script."""
 
     def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3",
-             retrieval="default", compressed="default"):
+             retrieval="default", compressed="default",
+             frontend="default"):
         import json
         import shutil
         root = tmp_path / "repo"
@@ -172,6 +173,11 @@ class TestGateCli:
         if compressed is not None:
             (root / "BENCH_compressed.json").write_text(
                 json.dumps(compressed))
+        if frontend == "default":
+            frontend = self.GOOD_FRONTEND
+        if frontend is not None:
+            (root / "BENCH_frontend.json").write_text(
+                json.dumps(frontend))
         args = [sys.executable, "scripts/bench_gate.py",
                 "--threshold", threshold]
         if baseline is not None:
@@ -209,6 +215,15 @@ class TestGateCli:
             "term_k2_packed-q8": {"recall": 1.0, "exact_ranking": True,
                                   "floor": 0.9, "pass": True}}},
         "paths": {"term_k2_packed": {"lookup_us": 95.0}},
+    }
+    GOOD_FRONTEND = {
+        "p95_gate": {"metric": "f", "pass": True, "per_path": {
+            "coalesced_cached": {"ratio": 2.5, "floor": 1.15,
+                                 "noise_floor": 1.05,
+                                 "effective_floor": 1.095,
+                                 "pass": True}}},
+        "paths": {"naive": {"p95_ms": 90.0, "goodput": 0.8},
+                  "coalesced_cached": {"p95_ms": 36.0, "goodput": 1.0}},
     }
 
     def test_missing_file_is_distinct_exit_code(self, gate, tmp_path):
@@ -266,6 +281,34 @@ class TestGateCli:
         r = self._run(tmp_path, serve=self.GOOD_SERVE, compressed=comp)
         assert r.returncode == gate.EXIT_FAIL
         assert "latency_gate" in r.stdout
+
+    def test_missing_frontend_file_is_distinct_exit_code(self, gate,
+                                                         tmp_path):
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, frontend=None)
+        assert r.returncode == gate.EXIT_MISSING
+        assert "BENCH_frontend.json" in r.stdout
+
+    def test_frontend_gate_failure_exits_one(self, gate, tmp_path):
+        front = dict(self.GOOD_FRONTEND)
+        front["p95_gate"] = dict(
+            front["p95_gate"],
+            **{"pass": False, "per_path": {"coalesced_cached": {
+                "ratio": 1.02, "floor": 1.15, "noise_floor": 1.05,
+                "effective_floor": 1.095, "pass": False}}})
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, frontend=front)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "frontend p95 gate" in r.stdout
+
+    def test_frontend_p95_baseline_regression_exits_one(self, gate,
+                                                        tmp_path):
+        """The open-loop p95 rides the relative baseline comparison:
+        a 2x tail blowup vs the committed snapshot fails even while the
+        absolute improvement-vs-naive gate still passes."""
+        baseline = {"BENCH_frontend.json": {
+            "paths": {"coalesced_cached": {"p95_ms": 12.0}}}}
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, baseline=baseline)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "regressed" in r.stdout
 
 
 class TestMinilint:
