@@ -16,7 +16,7 @@ import time
 import traceback
 
 SUITES = ("table1", "fig2", "index_build", "kernels", "snrm", "dist",
-          "partitioned", "retrieval", "compressed", "frontend")
+          "partitioned", "retrieval", "compressed", "frontend", "live")
 
 
 def main() -> None:

@@ -32,6 +32,19 @@ Three more read BENCH_compressed.json (the in-kernel codec claims):
 * ``q8_effectiveness_gate`` — packed retrieval ranking exactly matches
                         uncompressed; packed-q8 recall@10 >= 0.9.
 
+Two more read BENCH_live.json (the mutable-index serving claims):
+
+* ``live_ingest_gate`` — sustained ingest docs/s with a query thread
+                        hammering the engine must stay >= the bench's
+                        fraction floor of the quiescent ingest rate
+                        (discounted by the quiescent-vs-quiescent
+                        control's measured noise);
+* ``live_p95_gate``   — retrieve p95 while background compaction
+                        cycles run must stay within the bench's ceiling
+                        of the quiescent p95 (padded by the control's
+                        noise floor; the niced merge thread must never
+                        stall a query on the snapshot publish).
+
 One more reads BENCH_frontend.json (the async serving front end):
 
 * ``p95_gate``        — open-loop Poisson p95 latency under the
@@ -88,7 +101,8 @@ from typing import Iterator, List, Tuple
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_FILES = ("BENCH_partitioned.json", "BENCH_serve.json",
                "BENCH_build.json", "BENCH_retrieval.json",
-               "BENCH_compressed.json", "BENCH_frontend.json")
+               "BENCH_compressed.json", "BENCH_frontend.json",
+               "BENCH_live.json")
 DEFAULT_THRESHOLD = 1.3
 
 EXIT_PASS, EXIT_FAIL, EXIT_MISSING = 0, 1, 3
@@ -314,6 +328,43 @@ def check_frontend_gate(front: dict) -> bool:
     return bool(gate["pass"])
 
 
+def check_live_gates(live: dict) -> bool:
+    """The two absolute gates recorded by benchmarks/bench_live: ingest
+    throughput under concurrent query load (vs quiescent ingest) and
+    the retrieve p95 while background compaction cycles run (vs the
+    quiescent p95) — the mutable-index serving claims.  Both are
+    ratios, each discounted/padded by its own same-run true-1.0
+    control (see benchmarks/bench_live.py)."""
+    ok = True
+    gate = live.get("live_ingest_gate")
+    if gate is None:
+        print("live ingest gate: MISSING from BENCH_live.json")
+        ok = False
+    else:
+        print(f"live ingest gate [{gate['metric']}]: "
+              f"fraction={gate['ingest_fraction']:.2f} "
+              f"({gate['concurrent_docs_per_s']:.1f} vs "
+              f"{gate['quiescent_docs_per_s']:.1f} docs/s quiescent; "
+              f"floor {gate['effective_floor']:.3f} = {gate['floor']:g} "
+              f"* noise {gate['noise_floor']:.3f}) "
+              f"-> pass={gate['pass']}")
+        ok &= bool(gate["pass"])
+    gate = live.get("live_p95_gate")
+    if gate is None:
+        print("live p95 gate: MISSING from BENCH_live.json")
+        ok = False
+    else:
+        print(f"live p95 gate [{gate['metric']}]: "
+              f"ratio={gate['p95_ratio']:.2f} "
+              f"({gate['compacting_p95_us']:.0f}us vs "
+              f"{gate['quiescent_p95_us']:.0f}us quiescent; ceiling "
+              f"{gate['effective_ceiling']:.3f} = {gate['ceiling']:g}x "
+              f"* noise {gate['noise_floor']:.3f}) "
+              f"-> pass={gate['pass']}")
+        ok &= bool(gate["pass"])
+    return ok
+
+
 def print_shard_balance(obs_path: str) -> None:
     """Per-shard balance gauges from the bench run's obs snapshot
     (OBS_bench.json, written by ``benchmarks.run --obs-out``).  Purely
@@ -425,6 +476,19 @@ def main(argv=None) -> int:
             ok &= check_frontend_gate(json.load(f))
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read {front_path}: {e} "
+              f"(exit code {EXIT_MISSING})")
+        return EXIT_MISSING
+
+    live_path = os.path.join(REPO_ROOT, "BENCH_live.json")
+    if not os.path.exists(live_path):
+        print(f"bench gate: {live_path} is missing — did the live "
+              f"suite run? (exit code {EXIT_MISSING}, not a regression)")
+        return EXIT_MISSING
+    try:
+        with open(live_path) as f:
+            ok &= check_live_gates(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {live_path}: {e} "
               f"(exit code {EXIT_MISSING})")
         return EXIT_MISSING
     print_shard_balance(args.obs_snapshot)

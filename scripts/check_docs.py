@@ -1,0 +1,116 @@
+"""Execute the fenced ``python`` code blocks in the repo's Markdown docs.
+
+The docs lane (``scripts/ci.sh docs``) runs this so README.md's
+quickstart and the worked snippets in docs/ stay RUNNABLE, not
+aspirational: every fenced block whose info string is exactly
+``python`` is extracted, the blocks of one file are concatenated in
+order (so a later block may use names a previous block defined — write
+docs top-down) and executed once per file in a fresh subprocess with
+``PYTHONPATH=src`` and a scratch working directory.
+
+Conventions for doc authors:
+
+* ```` ```python ```` — executed.  Keep the file's blocks a single
+  coherent script; print-free is fine, output is only shown on failure.
+* ```` ```python norun ```` (any extra word) — shown but not executed;
+  use for illustrative fragments with free variables.
+* ```` ```bash ```` / ```` ```text ```` etc. — never executed here.
+
+Exit 0 = every checked file's blocks ran clean, 1 = a block raised
+(the failing file, the reconstructed script and the subprocess output
+are printed), 2 = a named file is missing.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+from typing import List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ["README.md", "docs/architecture.md", "docs/serving.md"]
+TIMEOUT_S = 600
+
+
+def extract_blocks(md_path: str) -> List[Tuple[int, str]]:
+    """Return ``(first_line_no, code)`` per executable python block."""
+    blocks: List[Tuple[int, str]] = []
+    fence = None          # the backtick run that opened the block, or None
+    executable = False
+    start = 0
+    buf: List[str] = []
+    with open(md_path, encoding="utf-8") as f:
+        for lineno, raw in enumerate(f, 1):
+            line = raw.rstrip("\n")
+            stripped = line.strip()
+            if fence is None:
+                if stripped.startswith("```"):
+                    ticks = len(stripped) - len(stripped.lstrip("`"))
+                    fence = "`" * ticks
+                    info = stripped[ticks:].strip()
+                    executable = info == "python"
+                    start = lineno + 1
+                    buf = []
+            elif stripped == fence:
+                if executable and buf:
+                    blocks.append((start, "\n".join(buf)))
+                fence = None
+            else:
+                buf.append(line)
+    if fence is not None:
+        raise SystemExit(f"{md_path}: unterminated ``` fence")
+    return blocks
+
+
+def script_for(rel: str, blocks: List[Tuple[int, str]]) -> str:
+    """Concatenate one file's blocks, tagging each with its source line."""
+    parts = []
+    for lineno, code in blocks:
+        parts.append(f"# --- {rel}:{lineno} ---\n{code}")
+    return "\n\n".join(parts) + "\n"
+
+
+def run_file(rel: str) -> bool:
+    path = os.path.join(REPO_ROOT, rel)
+    if not os.path.isfile(path):
+        print(f"check_docs: MISSING {rel}")
+        raise SystemExit(2)
+    blocks = extract_blocks(path)
+    if not blocks:
+        print(f"check_docs: {rel}: no python blocks")
+        return True
+    script = script_for(rel, blocks)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    with tempfile.TemporaryDirectory(prefix="check_docs_") as scratch:
+        proc = subprocess.run(
+            [sys.executable, "-c", script], cwd=scratch, env=env,
+            capture_output=True, text=True, timeout=TIMEOUT_S)
+    if proc.returncode != 0:
+        n = len(blocks)
+        print(f"check_docs: FAIL {rel} ({n} block(s))")
+        print("--- script ---")
+        for i, line in enumerate(script.splitlines(), 1):
+            print(f"{i:4d} | {line}")
+        print("--- stdout ---")
+        print(proc.stdout, end="")
+        print("--- stderr ---")
+        print(proc.stderr, end="")
+        return False
+    print(f"check_docs: ok {rel} ({len(blocks)} block(s))")
+    return True
+
+
+def main(argv=None) -> int:
+    files = argv if argv else DEFAULT_FILES
+    ok = True
+    for rel in files:
+        ok = run_file(rel) and ok
+    print("check_docs: clean" if ok else "check_docs: FAILURES")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

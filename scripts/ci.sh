@@ -11,6 +11,11 @@
 #                           the bundled AST fallback scripts/minilint.py
 #                           (syntax errors, unused imports, whitespace) so
 #                           ruff-less containers still gate something real
+#   scripts/ci.sh docs      docs lane: scripts/check_docs.py executes every
+#                           fenced ```python block in README.md and docs/*.md
+#                           (the quickstart stays RUNNABLE, not aspirational)
+#                           and scripts/minilint.py gates docstring coverage
+#                           (D103) over the public core/dist/serving surface
 #   scripts/ci.sh bench     perf lanes + the regression gate.  Runs the
 #                           dist-substrate, partitioned-serving (fused vs
 #                           jnp grid + the Zipfian sub-shard corpus),
@@ -19,8 +24,9 @@
 #                           serving-frontend benchmarks, emitting
 #                           BENCH_partitioned.json, BENCH_serve.json,
 #                           BENCH_build.json, BENCH_retrieval.json,
-#                           BENCH_compressed.json and
-#                           BENCH_frontend.json; then
+#                           BENCH_compressed.json,
+#                           BENCH_frontend.json and (live-index ingest +
+#                           compaction-tail) BENCH_live.json; then
 #                           scripts/bench_gate.py (1) re-checks the
 #                           absolute gates (fused K=2 lookup <=
 #                           replicated jnp; zipf bytes_shrink >= 0.8*K;
@@ -60,11 +66,16 @@ case "${1:-full}" in
            echo "ci.sh lint: ruff not installed; using scripts/minilint.py" >&2
            exec python scripts/minilint.py
          fi ;;
+  docs)  python scripts/check_docs.py
+         # minilint's D103 rule covers the docstring floor even when the
+         # lint lane runs ruff (which has no docstring gate configured)
+         exec python scripts/minilint.py src/repro ;;
   bench) baseline_dir=$(mktemp -d)
          trap 'rm -rf "$baseline_dir"' EXIT
          for f in BENCH_partitioned.json BENCH_serve.json \
                   BENCH_build.json BENCH_retrieval.json \
-                  BENCH_compressed.json BENCH_frontend.json; do
+                  BENCH_compressed.json BENCH_frontend.json \
+                  BENCH_live.json; do
            git show "HEAD:$f" > "$baseline_dir/$f" 2>/dev/null || \
              rm -f "$baseline_dir/$f"
          done
@@ -72,10 +83,10 @@ case "${1:-full}" in
          # balance, build counters, span timings) — uploaded next to the
          # BENCH_*.json artifacts; bench_gate prints its balance gauges
          python -m benchmarks.run \
-           --only dist,partitioned,index_build,retrieval,compressed,frontend \
+           --only dist,partitioned,index_build,retrieval,compressed,frontend,live \
            --obs-out OBS_bench.json
          # no exec: the EXIT trap must still fire to clean the snapshot
          python scripts/bench_gate.py --baseline-dir "$baseline_dir"
          ;;
-  *) echo "usage: scripts/ci.sh [full|fast|lint|bench]" >&2; exit 2 ;;
+  *) echo "usage: scripts/ci.sh [full|fast|lint|docs|bench]" >&2; exit 2 ;;
 esac

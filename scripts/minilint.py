@@ -11,7 +11,12 @@ this AST-based subset so the lane still gates something real:
 * trailing whitespace and tabs in indentation;
 * bare ``print(`` calls in ``src/repro/`` outside ``launch/`` (T201) —
   library telemetry belongs on the structured ``repro.obs`` logger, not
-  stdout; opt out per line with ``# noqa``.
+  stdout; opt out per line with ``# noqa``;
+* missing docstrings on top-level public functions in ``src/repro/``'s
+  ``core/``, ``dist/`` and ``serving/`` packages (D103) — these are the
+  index/serving surface the docs lane (``scripts/ci.sh docs``) promises
+  stays documented; opt out per function with ``# noqa`` on its ``def``
+  line.
 
 Exit code 0 = clean, 1 = findings (printed as file:line: code message —
 the ruff-ish format editors already parse).
@@ -119,6 +124,30 @@ def print_findings(tree: ast.AST, rel: str) -> List[Tuple[int, str]]:
     return findings
 
 
+_DOCSTRING_PKGS = ("src/repro/core/", "src/repro/dist/",
+                   "src/repro/serving/")
+
+
+def docstring_findings(tree: ast.AST, rel: str) -> List[Tuple[int, str]]:
+    """D103: top-level public functions in the core/dist/serving
+    packages must carry a docstring — the public index/serving surface
+    the docs lane gates.  Private (``_``-prefixed) helpers, methods and
+    nested functions are exempt; a deliberate exception opts out with
+    ``# noqa`` on the ``def`` line."""
+    rel = rel.replace(os.sep, "/")
+    if not rel.startswith(_DOCSTRING_PKGS):
+        return []
+    findings = []
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                not node.name.startswith("_") and \
+                ast.get_docstring(node) is None:
+            findings.append(
+                (node.lineno, f"D103 public function `{node.name}` "
+                              f"missing docstring"))
+    return findings
+
+
 def whitespace_findings(src: str) -> List[Tuple[int, str]]:
     findings = []
     for i, line in enumerate(src.splitlines(), 1):
@@ -140,7 +169,7 @@ def lint_file(path: str) -> List[str]:
         return [f"{rel}:{e.lineno}: E999 {e.msg}"]
     is_init = os.path.basename(path) == "__init__.py"
     findings = unused_imports(tree, is_init) + whitespace_findings(src) \
-        + print_findings(tree, rel)
+        + print_findings(tree, rel) + docstring_findings(tree, rel)
     lines = src.splitlines()
     findings = [(line, msg) for line, msg in findings
                 if "# noqa" not in lines[line - 1]]

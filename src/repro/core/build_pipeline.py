@@ -319,10 +319,20 @@ class BuildPipeline:
 
     def stream_runs(self, tokens: np.ndarray, seg_ids: np.ndarray, *,
                     batch_size: int = 32, max_uniq: Optional[int] = None,
-                    spill_dir: Optional[str] = None, verbose: bool = False
+                    spill_dir: Optional[str] = None, verbose: bool = False,
+                    doc_start: int = 0
                     ) -> Tuple[RunSpiller, BuildStats]:
         """Run the device pipeline over all docs, emitting one term-sorted
-        posting run per batch into a :class:`RunSpiller`."""
+        posting run per batch into a :class:`RunSpiller`.
+
+        ``doc_start`` offsets every emitted doc id: row ``i`` of ``tokens``
+        lands as doc ``doc_start + i``.  The live-index delta builds
+        (:class:`~repro.dist.live.LiveIndex`) use it to place freshly
+        ingested documents after the base corpus in the shared doc-id
+        space; the offset rides the same ``jnp.int32`` batch-offset input
+        the compaction kernel already takes, so an offset build is
+        bitwise-identical to the same docs built at position zero in a
+        larger corpus."""
         from .builder import make_batch_interaction_fn
 
         n_docs, Lp = tokens.shape
@@ -357,7 +367,7 @@ class BuildPipeline:
                     vals = interact_fn(tb_d, jnp.asarray(sb), ub)  # stage 2
                 with obs.span("build.stage2b.compact"):
                     terms, docs, rows, n_valid = compact_fn(
-                        vals, ub, jnp.int32(s))                  # stage 2b
+                        vals, ub, jnp.int32(doc_start + s))      # stage 2b
                     n = int(n_valid)
                 # padded docs (rows >= e): only -1 uniq slots -> masked out
                 with obs.span("build.stage3.spill"):

@@ -67,6 +67,28 @@ def make_batch_interaction_fn(provider: EmbeddingProvider, idf: jnp.ndarray,
 
 
 class IndexBuilder:
+    """Offline SEINE indexer: corpus -> segment inverted index.
+
+    Binds the pieces a build needs — config (interaction functions,
+    ``n_segments``, tf threshold), vocabulary (slot mapping + idf) and
+    an :class:`~repro.core.providers.EmbeddingProvider` — and exposes
+    the two build entry points:
+
+    * :meth:`build` — a single-host :class:`SegmentInvertedIndex`
+      (one global CSR; the legacy layout the oracle-parity suites
+      compare everything against);
+    * :meth:`build_partitioned` — the production path: K nnz-balanced
+      term-range shards streamed straight from the staged device
+      pipeline (stages 1-3 per batch, spillable term-sorted runs,
+      stage-4 k-way merge per shard), optionally codec-packed.  The
+      global CSR is never materialised.
+
+    Both are bitwise-deterministic in the corpus (batch splits included)
+    — the property :class:`~repro.dist.live.LiveIndex` leans on to make
+    incremental ingest exact.  Telemetry from the most recent build is
+    kept in :attr:`last_build_stats`.
+    """
+
     def __init__(self, cfg: SeineConfig, vocab: Vocabulary,
                  provider: EmbeddingProvider,
                  ip: Optional[Dict[str, Any]] = None,

@@ -54,6 +54,7 @@ INT32_MAX = np.iinfo(np.int32).max
 
 
 def validate_codec(codec: Optional[str]) -> str:
+    """Normalize ``codec`` (None -> "none") and reject unknown names."""
     c = codec or "none"
     if c not in CODECS:
         raise ValueError(f"unknown codec {c!r}; supported: {CODECS}")

@@ -108,6 +108,8 @@ class LMProvider:
 
 def make_provider(name: str, vocab_size: int, embed_dim: int, *,
                   seed: int = 0) -> EmbeddingProvider:
+    """Factory for the by-name providers: "hash" (deterministic random
+    table, no params) or "learned" (trainable normal-init table)."""
     if name == "hash":
         return HashProvider(vocab_size, embed_dim, seed=seed)
     if name == "learned":

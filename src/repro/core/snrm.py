@@ -25,6 +25,8 @@ Params = Dict[str, Any]
 
 def init_snrm(key, vocab_size: int, d_latent: int = 256,
               d_emb: int = 64, d_hidden: int = 128) -> Params:
+    """SNRM parameter pytree: token embedding + 2-layer MLP encoder
+    into the sparse ``d_latent`` space (Zamani et al. 2018)."""
     k1, k2, k3 = jax.random.split(key, 3)
     return {
         "emb": dense_init(k1, vocab_size, d_emb),
@@ -44,6 +46,7 @@ def encode(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
 
 
 def score(p: Params, q_tokens: jnp.ndarray, d_tokens: jnp.ndarray) -> jnp.ndarray:
+    """Dot product of the query and doc sparse latent encodings."""
     return jnp.sum(encode(p, q_tokens) * encode(p, d_tokens), axis=-1)
 
 

@@ -12,6 +12,9 @@ module owns one of those axes:
 * ``partition``   — term-range partitioned index (PartitionedIndex): K
                     nnz-balanced shards, no replicated CSR skeleton, exact
                     partial-row merge (built by sharding.partition_index);
+* ``live``        — mutable serving index (LiveIndex): LSM-style delta
+                    runs, tombstone deletes and background compaction
+                    layered over a PartitionedIndex base;
 * ``compression`` — int8 / top-k gradient compression with error feedback
                     (consumed by train/loop.py);
 * ``fault``       — heartbeats, straggler detection, cooperative
@@ -24,6 +27,7 @@ from .compression import (compress_with_feedback, dequantize_int8,
                           topk_sparsify)
 from .fault import (Heartbeat, PreemptionGuard, StragglerMonitor,
                     plan_elastic_mesh)
+from .live import LiveIndex, LiveView, live_index
 from .partition import (PartitionedIndex, merged_term_counts,
                         partitioned_from_runs)
 from .sharding import (data_axes, fit_spec, gnn_param_rules, index_shardings,
@@ -39,6 +43,7 @@ __all__ = [
     "compress_with_feedback", "dequantize_int8", "init_error_feedback",
     "quantize_int8", "topk_densify", "topk_sparsify",
     "Heartbeat", "PreemptionGuard", "StragglerMonitor", "plan_elastic_mesh",
+    "LiveIndex", "LiveView", "live_index",
     "PartitionedIndex", "merged_term_counts", "partitioned_from_runs",
     "data_axes", "fit_spec", "gnn_param_rules", "index_shardings",
     "lm_cache_spec", "lm_param_rules", "lm_param_rules_fsdp",

@@ -35,6 +35,7 @@ def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Invert :func:`quantize_int8`: int8 codes * scale -> f32."""
     return q.astype(jnp.float32) * scale
 
 

@@ -227,7 +227,7 @@ class PartitionedIndex:
     # -- lookups (Eq. 4, term-partitioned) ----------------------------------
 
     def lookup_pairs(self, term_ids: jnp.ndarray, doc_ids: jnp.ndarray,
-                     *, impl: str = None) -> jnp.ndarray:
+                     *, impl: str = None, alive=None) -> jnp.ndarray:
         """(..., Q) term ids x (...,) doc ids -> (..., Q, n_b, n_f).
 
         Route each term to its owning shard, resolve shard-locally (zeros
@@ -245,6 +245,10 @@ class PartitionedIndex:
           to an all-reduce when the leading K axis is mesh-placed
           (``shard_partitioned_index``).  K-fold more work on one
           device — keep it only under a live mesh.
+
+        ``alive`` (n_docs,) bool tombstones deleted docs: their pairs
+        resolve to exact zeros, identical to an index rebuilt without
+        them (:class:`~repro.dist.live.LiveIndex` passes it).
         """
         if impl not in (None, "fused", "jnp"):
             raise ValueError(f"unknown lookup impl {impl!r}; supported: "
@@ -258,12 +262,12 @@ class PartitionedIndex:
                     self._serve_values, self.value_scale,
                     self.term_to_shard, self.range_lo, term_ids, doc_ids,
                     self.split_term, self.split_doc, tile=self.codec_tile,
-                    spans=self.codec_spans)
+                    spans=self.codec_spans, alive=alive)
             from ..kernels.csr_lookup import lookup_pairs_ref
             return lookup_pairs_ref(
                 self.term_offsets, self.doc_ids, self.values,
                 self.term_to_shard, self.range_lo, term_ids, doc_ids,
-                self.split_term, self.split_doc)
+                self.split_term, self.split_doc, alive=alive)
         w = term_ids.clip(0)
         d = jnp.broadcast_to(doc_ids[..., None], term_ids.shape)
         shard_of = self.term_to_shard.at[w].get(mode="clip")
@@ -281,6 +285,8 @@ class PartitionedIndex:
             local = (w - lo_k).clip(0)
             pos, in_list = csr_lookup_positions(offsets_k, docs_k, local, d)
             found = in_list & owned
+            if alive is not None:
+                found = found & alive.at[d].get(mode="clip")
             vals = values_k.at[pos].get(mode="clip")
             return vals * found[..., None, None]
 
@@ -291,8 +297,8 @@ class PartitionedIndex:
         return parts.sum(axis=0)
 
     def qd_matrix(self, query_terms: jnp.ndarray, doc_ids: jnp.ndarray,
-                  *, impl: str = None, tile: Optional[int] = None
-                  ) -> jnp.ndarray:
+                  *, impl: str = None, tile: Optional[int] = None,
+                  alive=None) -> jnp.ndarray:
         """query_terms (Q,), doc_ids (B,) -> M_{q,d} (B, Q, n_b, n_f).
 
         The serving hot path.  ``impl=None``/``"fused"`` dispatches to
@@ -309,7 +315,7 @@ class PartitionedIndex:
         if impl == "jnp":
             q = jnp.broadcast_to(query_terms[None],
                                  (doc_ids.shape[0],) + query_terms.shape)
-            return self.lookup_pairs(q, doc_ids, impl="jnp")
+            return self.lookup_pairs(q, doc_ids, impl="jnp", alive=alive)
         self._check_codec_tile(tile)
         from ..kernels.csr_lookup import csr_lookup
         return csr_lookup(
@@ -323,11 +329,13 @@ class PartitionedIndex:
             packed=self._packed() if self.codec != "none" else None,
             value_scale=self.value_scale,
             max_tile_words=self.max_tile_words,
-            codec_spans=self.codec_spans)
+            codec_spans=self.codec_spans, alive=alive)
 
     def retrieve_topk(self, query_terms: jnp.ndarray, k: int,
                       score_block_fn, *, doc_block: Optional[int] = None,
-                      impl: str = None, tile: Optional[int] = None
+                      impl: str = None, tile: Optional[int] = None,
+                      alive=None, n_docs: Optional[int] = None,
+                      extra_m_fn=None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """First-stage top-k over the whole corpus — no candidate set.
 
@@ -340,20 +348,29 @@ class PartitionedIndex:
         sub-shards hold disjoint doc slices) and the cross-shard merge
         stays an exclusive segment scatter — no per-pair ``route_pairs``
         needed on the scan path.
+
+        ``alive``/``n_docs``/``extra_m_fn`` are the live-index hooks:
+        tombstone mask, a doc-space total larger than this index's own
+        (delta docs live past the base corpus — base lanes just find
+        empty windows there), and the per-block delta M to add before
+        scoring (exclusive ownership keeps the sum exact; see
+        :func:`~repro.kernels.csr_lookup.csr_retrieve_topk`).
         """
         self._check_codec_tile(tile)
         from ..kernels.csr_lookup import csr_retrieve_topk
         return csr_retrieve_topk(
             self.term_offsets, self.doc_ids, self._serve_values,
             self.term_to_shard, self.range_lo, self.range_hi, query_terms,
-            n_docs=self.n_docs, k=k, score_block_fn=score_block_fn,
+            n_docs=self.n_docs if n_docs is None else int(n_docs),
+            k=k, score_block_fn=score_block_fn,
             doc_block=doc_block,
             tile=self.codec_tile if self.codec != "none" else tile,
             impl=impl, codec=self.codec,
             packed=self._packed() if self.codec != "none" else None,
             value_scale=self.value_scale,
             max_tile_words=self.max_tile_words,
-            codec_spans=self.codec_spans, fences=self.fences)
+            codec_spans=self.codec_spans, fences=self.fences,
+            alive=alive, extra_m_fn=extra_m_fn)
 
     def _check_codec_tile(self, tile):
         """Satellite guard: a packed layout bakes its tile width into the

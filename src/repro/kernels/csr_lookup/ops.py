@@ -33,7 +33,7 @@ from .ref import (bisect_steps, cached_tile_lookup, csr_lookup_packed_ref,
                   csr_lookup_ref, lookup_pairs_ref, merge_windows,
                   packed_bisect, retrieve_block_packed_ref,
                   retrieve_block_ref, retrieve_lanes, route_pairs,
-                  route_terms, _lane_scale)
+                  route_terms, _alive_at, _lane_scale)
 
 
 def _check_packed_args(codec, packed, fences, values, tile, t):
@@ -78,7 +78,8 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                packed=None,
                value_scale: jnp.ndarray | None = None,
                max_tile_words: int = 0,
-               codec_spans: tuple = (0, 0)) -> jnp.ndarray:
+               codec_spans: tuple = (0, 0),
+               alive: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fused lookup–merge: query_terms (Q,) x doc_targets (B,) over a
     K-stacked shard CSR -> M_{q,d} (B, Q, n_b, n_f); zeros for absent
     pairs, OOV / past-vocab terms and out-of-range doc ids.
@@ -102,6 +103,12 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     ``codec_spans`` is the pack-time (max tiles spanned, max posting-list
     length) loop-bound hint the CPU lowering's two-level bisect uses —
     ``(0, 0)`` falls back to the worst-case iteration counts.
+
+    ``alive`` (n_docs,) bool tombstones deleted docs: their pairs
+    resolve to the same exact zeros as absent pairs.  On the CPU refs it
+    folds into the found mask; on the kernel paths the kernel's output
+    rows are masked per candidate doc — mathematically identical, since
+    not-found rows are already exact zeros and the mask is per doc.
     """
     from ...core.index import POSTING_TILE, build_fences, fence_count
 
@@ -112,7 +119,8 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
             return csr_lookup_packed_ref(
                 term_offsets, packed, fences, values, value_scale,
                 term_to_shard, range_lo, query_terms, doc_targets,
-                split_term, split_doc, tile=t, spans=tuple(codec_spans))
+                split_term, split_doc, tile=t, spans=tuple(codec_spans),
+                alive=alive)
         if split_term is None:
             k, lo, hi = route_terms(query_terms, term_offsets,
                                     term_to_shard, range_lo)
@@ -129,15 +137,16 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
             scale = _lane_scale(value_scale, range_lo, k, scale_w)
             if scale.ndim == 1:
                 scale = scale[:, None]                   # (Q, 1)
-        return csr_lookup_packed_pallas(
+        out = csr_lookup_packed_pallas(
             k.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32),
             doc_targets.astype(jnp.int32), packed, fences, values, scale,
             tile=t, max_tile_words=int(max_tile_words),
             interpret=bool(interpret))
+        return _mask_dead_rows(out, alive, doc_targets)
     if interpret is None and jax.default_backend() != "tpu":
         return csr_lookup_ref(term_offsets, doc_ids, values, term_to_shard,
                               range_lo, query_terms, doc_targets,
-                              split_term, split_doc)
+                              split_term, split_doc, alive=alive)
     if split_term is None:
         k, lo, hi = route_terms(query_terms, term_offsets, term_to_shard,
                                 range_lo)
@@ -157,10 +166,22 @@ def csr_lookup(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     # whenever the requested tile disagrees (the parity sweep's override)
     if fences is None or t != POSTING_TILE or fences.shape[1] != n_fence:
         fences = build_fences(doc_ids, t)    # already tile-padded: exact
-    return csr_lookup_pallas(
+    out = csr_lookup_pallas(
         k.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32),
         doc_targets.astype(jnp.int32), doc_ids, fences,
         values.astype(jnp.float32), tile=t, interpret=bool(interpret))
+    return _mask_dead_rows(out, alive, doc_targets)
+
+
+def _mask_dead_rows(out, alive, doc_targets):
+    """Tombstone the kernel lookup's output: ``out`` (B, Q, n_b, n_f)
+    rows of dead candidate docs are zeroed.  Equal to folding ``alive``
+    into the in-kernel found mask — the mask is per candidate doc, and
+    not-found rows are exact zeros already (0 -> 0 either way)."""
+    if alive is None:
+        return out
+    return jnp.where(_alive_at(alive, doc_targets)[:, None, None, None],
+                     out, 0.0)
 
 
 def _pad_for_windows(doc_ids, values, t):
@@ -179,7 +200,7 @@ def _pad_for_windows(doc_ids, values, t):
 
 def _retrieve_block_windows(term_offsets, dids_p, vals_p, term_to_shard,
                             range_lo, range_hi, query_terms, blo, block,
-                            t, interpret):
+                            t, interpret, alive=None):
     """Kernel-path doc block: locate lane windows in jnp, gather via the
     Pallas window kernel, merge with the shared segment scatter.
 
@@ -213,7 +234,8 @@ def _retrieve_block_windows(term_offsets, dids_p, vals_p, term_to_shard,
     w = n_win * t
     doc_win = ids_w.reshape(q_n, k_n, w)
     val_win = vals_w.reshape((q_n, k_n, w) + vals_p.shape[2:])
-    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block,
+                         alive=alive)
 
 
 def _pad_vals_for_windows(values, t):
@@ -230,7 +252,7 @@ def _pad_vals_for_windows(values, t):
 def _retrieve_block_windows_packed(term_offsets, packed, fences, vals_p,
                                    value_scale, term_to_shard, range_lo,
                                    range_hi, query_terms, blo, block,
-                                   t, mw, interpret):
+                                   t, mw, interpret, alive=None):
     """Packed-codec kernel-path doc block.
 
     Lane windows must start on posting-tile boundaries — the tile is the
@@ -282,7 +304,7 @@ def _retrieve_block_windows_packed(term_offsets, packed, fences, vals_p,
         scale = _lane_scale(value_scale, range_lo, ks, query_terms[:, None])
         val_win = val_win.astype(jnp.float32) * scale[..., None, None, None]
     return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block,
-                         lead=lead)
+                         lead=lead, alive=alive)
 
 
 def _retrieve_dispatch(impl):
@@ -315,7 +337,8 @@ def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                        value_scale: jnp.ndarray | None = None,
                        max_tile_words: int = 0,
                        codec_spans: tuple = (0, 0),
-                       fences: jnp.ndarray | None = None) -> jnp.ndarray:
+                       fences: jnp.ndarray | None = None,
+                       alive: jnp.ndarray | None = None) -> jnp.ndarray:
     """Posting-range scan entry point: M rows for docs
     ``[blo, blo + block)`` x query_terms (Q,) over a K-stacked shard CSR
     -> (block, Q, n_b, n_f), built by walking the query's posting lists
@@ -325,7 +348,9 @@ def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     means the segment merge writes each cell at most once, zeros
     elsewhere (the sigma=0 semantics).  Dispatch via ``impl`` — see
     :func:`_retrieve_dispatch`; packed codecs as in :func:`csr_lookup`
-    (``tile`` must equal the build-time codec tile).
+    (``tile`` must equal the build-time codec tile); ``alive`` (n_docs,)
+    bool tombstones deleted docs' rows to exact zeros on every path
+    (the mask folds into the shared window merge).
     """
     use_ref, interpret = _retrieve_dispatch(impl)
     from ...core.index import POSTING_TILE
@@ -337,20 +362,21 @@ def csr_retrieve_block(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
             return retrieve_block_packed_ref(
                 term_offsets, packed, fences, values, value_scale,
                 term_to_shard, range_lo, range_hi, query_terms, blo,
-                block, tile=t, spans=tuple(codec_spans))
+                block, tile=t, spans=tuple(codec_spans), alive=alive)
         vals_p = _pad_vals_for_windows(values, t)
         return _retrieve_block_windows_packed(
             term_offsets, packed, fences, vals_p, value_scale,
             term_to_shard, range_lo, range_hi, query_terms, blo, block,
-            t, int(max_tile_words), interpret)
+            t, int(max_tile_words), interpret, alive=alive)
     if use_ref:
         return retrieve_block_ref(term_offsets, doc_ids, values,
                                   term_to_shard, range_lo, range_hi,
-                                  query_terms, blo, block)
+                                  query_terms, blo, block, alive=alive)
     dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
     return _retrieve_block_windows(term_offsets, dids_p, vals_p,
                                    term_to_shard, range_lo, range_hi,
-                                   query_terms, blo, block, t, interpret)
+                                   query_terms, blo, block, t, interpret,
+                                   alive=alive)
 
 
 def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
@@ -362,7 +388,9 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                       value_scale: jnp.ndarray | None = None,
                       max_tile_words: int = 0,
                       codec_spans: tuple = (0, 0),
-                      fences: jnp.ndarray | None = None):
+                      fences: jnp.ndarray | None = None,
+                      alive: jnp.ndarray | None = None,
+                      extra_m_fn=None):
     """First-stage top-k driver: scan the whole corpus in doc blocks,
     score each block with ``score_block_fn(M_block, doc_ids_block) ->
     (block,)``, and keep a running device-side top-k.
@@ -388,6 +416,16 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     Not jit'd here: ``score_block_fn`` is typically a fresh closure per
     call (it would force a retrace as a static argument), so callers jit
     their own wrapper — ``SeineEngine.retrieve`` does.
+
+    ``alive`` (n_docs,) bool tombstones deleted docs: their M rows zero
+    on every path AND their scores mask to ``-inf`` before the merge, so
+    a deleted doc can never appear in the top-k; ``extra_m_fn(blo)
+    -> (block, Q, n_b, n_f)``, when given, is added onto each base
+    block before scoring.  The live index composes its delta run this
+    way: exclusive (term, doc) ownership between base and delta makes
+    the sum an exclusive write per cell (x + 0 = x exactly in f32), so
+    the composed M — and hence the ranking — stays bitwise-equal to a
+    monolithic rebuild.
     """
     n_docs = int(n_docs)
     k = int(k)
@@ -404,7 +442,7 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                 return retrieve_block_packed_ref(
                     term_offsets, packed, fences, values, value_scale,
                     term_to_shard, range_lo, range_hi, query_terms, blo,
-                    block, tile=t, spans=tuple(codec_spans))
+                    block, tile=t, spans=tuple(codec_spans), alive=alive)
         else:
             vals_p = _pad_vals_for_windows(values, t)
 
@@ -412,19 +450,20 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                 return _retrieve_block_windows_packed(
                     term_offsets, packed, fences, vals_p, value_scale,
                     term_to_shard, range_lo, range_hi, query_terms, blo,
-                    block, t, int(max_tile_words), interpret)
+                    block, t, int(max_tile_words), interpret, alive=alive)
     elif use_ref:
         def block_m(blo):
             return retrieve_block_ref(term_offsets, doc_ids, values,
                                       term_to_shard, range_lo, range_hi,
-                                      query_terms, blo, block)
+                                      query_terms, blo, block, alive=alive)
     else:
         dids_p, vals_p = _pad_for_windows(doc_ids, values, t)
 
         def block_m(blo):
             return _retrieve_block_windows(
                 term_offsets, dids_p, vals_p, term_to_shard, range_lo,
-                range_hi, query_terms, blo, block, t, interpret)
+                range_hi, query_terms, blo, block, t, interpret,
+                alive=alive)
 
     init = (jnp.full((k,), -jnp.inf, jnp.float32),
             jnp.full((k,), -1, jnp.int32))
@@ -433,9 +472,13 @@ def csr_retrieve_topk(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
         run_v, run_i = carry
         blo = b * block
         m = block_m(blo)
+        if extra_m_fn is not None:
+            m = m + extra_m_fn(blo)
         docs = blo + jnp.arange(block, dtype=jnp.int32)
         s = score_block_fn(m, docs).astype(jnp.float32)
         s = jnp.where(docs < n_docs, s, -jnp.inf)
+        if alive is not None:
+            s = jnp.where(alive.at[docs].get(mode="clip"), s, -jnp.inf)
         top_v, idx = jax.lax.top_k(jnp.concatenate([run_v, s]), k)
         return top_v, jnp.concatenate([run_i, docs])[idx]
 

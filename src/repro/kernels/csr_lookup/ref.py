@@ -56,6 +56,17 @@ def bisect_steps(n: int) -> int:
     return max(int(n).bit_length(), 1)
 
 
+def _alive_at(alive, d):
+    """Tombstone gather: ``alive`` (n_docs,) bool -> mask shaped like
+    ``d``.  Out-of-range ids clip to the array edge; every caller ANDs
+    the result under a found/in-window mask that is already False for
+    ids not actually present, so the clipped garbage never surfaces.
+    Folding the mask into the found check keeps deleted docs on the
+    exact-zero path absent pairs already take (x * 0 = +0.0), so a
+    tombstoned index is bitwise-equal to one rebuilt without the doc."""
+    return alive.at[d].get(mode="clip")
+
+
 def route_terms(term_ids: jnp.ndarray, term_offsets: jnp.ndarray,
                 term_to_shard, range_lo):
     """Route global term ids to owning shards and posting ranges.
@@ -131,9 +142,12 @@ def _route(term_ids, doc_targets, term_offsets, term_to_shard, range_lo,
 def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                      values: jnp.ndarray, term_to_shard, range_lo,
                      term_ids: jnp.ndarray, doc_targets: jnp.ndarray,
-                     split_term=None, split_doc=None) -> jnp.ndarray:
+                     split_term=None, split_doc=None,
+                     alive=None) -> jnp.ndarray:
     """Generic-batch routed lookup: term_ids (..., Q) x doc_targets
-    broadcastable (...,) -> (..., Q, n_b, n_f), zeros for absent pairs."""
+    broadcastable (...,) -> (..., Q, n_b, n_f), zeros for absent pairs.
+    ``alive`` (n_docs,) bool, when given, tombstones docs: pairs whose
+    doc is dead resolve to the same exact zeros as absent pairs."""
     from ...core.index import _bisect
 
     K, N = doc_ids.shape
@@ -144,6 +158,8 @@ def lookup_pairs_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     flat = doc_ids.reshape(K * N)
     pos = _bisect(flat, base + lo, base + hi, d, n_iter=bisect_steps(N))
     in_list = (pos < base + hi) & (flat.at[pos].get(mode="clip") == d)
+    if alive is not None:
+        in_list = in_list & _alive_at(alive, d)
     vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
     # select, not multiply-by-mask: XLA fuses the select into the gather
     # consumer, a bool-mask product materialises a second full-size pass
@@ -200,7 +216,7 @@ def retrieve_lanes(query_terms: jnp.ndarray, term_offsets: jnp.ndarray,
 
 def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
                   n_valid: jnp.ndarray, blo, block: int,
-                  lead=None) -> jnp.ndarray:
+                  lead=None, alive=None) -> jnp.ndarray:
     """Scatter gathered posting windows into one dense doc-block of M.
 
     ``doc_win`` (Q, K, W) doc ids / ``val_win`` (Q, K, W, n_b, n_f)
@@ -218,6 +234,13 @@ def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
     atomic decode unit), so the first ``lead`` entries belong to doc ids
     below the block and must fall in the overflow bin with the tail.
 
+    ``alive`` (n_docs,) bool, when given, routes tombstoned docs'
+    postings to the overflow bin too — every retrieve path (jnp ref and
+    both Pallas window paths) funnels through this merge, so folding
+    the mask here deletes docs from first-stage scoring everywhere at
+    once, with the same exact-zero result a rebuild without the doc
+    would produce.
+
     Returns M (block, Q, n_b, n_f).
     """
     q_n, k_n, w_n = doc_win.shape
@@ -226,6 +249,8 @@ def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
         in_win = idx < n_valid[..., None]
     else:
         in_win = (idx >= lead[..., None]) & (idx < (lead + n_valid)[..., None])
+    if alive is not None:
+        in_win = in_win & _alive_at(alive, doc_win)
     seg = jnp.where(in_win, doc_win - blo, block)         # overflow bin
     seg = seg.reshape(q_n, k_n * w_n)
     vals = val_win.reshape((q_n, k_n * w_n) + val_win.shape[3:])
@@ -237,7 +262,7 @@ def merge_windows(doc_win: jnp.ndarray, val_win: jnp.ndarray,
 def retrieve_block_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                        values: jnp.ndarray, term_to_shard, range_lo,
                        range_hi, query_terms: jnp.ndarray, blo,
-                       block: int) -> jnp.ndarray:
+                       block: int, alive=None) -> jnp.ndarray:
     """One doc block of the first-stage posting scan, pure jnp.
 
     Builds M rows for docs ``[blo, blo + block)`` x every query term by
@@ -266,13 +291,15 @@ def retrieve_block_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     doc_win = flat.at[p].get(mode="clip")
     flat_vals = values.reshape((k_n * n,) + values.shape[2:])
     val_win = flat_vals.at[p].get(mode="clip")
-    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block,
+                         alive=alive)
 
 
 def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
                    values: jnp.ndarray, term_to_shard, range_lo,
                    query_terms: jnp.ndarray, doc_targets: jnp.ndarray,
-                   split_term=None, split_doc=None) -> jnp.ndarray:
+                   split_term=None, split_doc=None,
+                   alive=None) -> jnp.ndarray:
     """The serving cartesian: query_terms (Q,) x doc_targets (B,) ->
     M_{q,d} (B, Q, n_b, n_f).
 
@@ -295,6 +322,8 @@ def csr_lookup_ref(term_offsets: jnp.ndarray, doc_ids: jnp.ndarray,
     flat = doc_ids.reshape(K * N)
     pos = _bisect(flat, lo_f, hi_f, d, n_iter=bisect_steps(N))
     in_list = (pos < hi_f) & (flat.at[pos].get(mode="clip") == d)
+    if alive is not None:
+        in_list = in_list & _alive_at(alive, d)
     vals = values.reshape((K * N,) + values.shape[2:]).at[pos].get(mode="clip")
     # select over multiply-by-mask: see lookup_pairs_ref
     return jnp.where(in_list[..., None, None], vals, 0.0)
@@ -428,7 +457,7 @@ def _lane_scale(value_scale, range_lo, k, term_ids):
 
 def _lookup_packed(term_offsets, packed, fences, values, value_scale,
                    term_to_shard, range_lo, split_term, split_doc,
-                   term_ids, d, *, tile: int, spans=(0, 0)):
+                   term_ids, d, *, tile: int, spans=(0, 0), alive=None):
     """Shared body of the packed lookup refs: route, two-level packed
     bisect, decode-at-found check, values gather (+ optional dequant).
     ``term_ids``/``d`` already broadcast to the common pair shape."""
@@ -440,6 +469,8 @@ def _lookup_packed(term_offsets, packed, fences, values, value_scale,
     pos, v_at = packed_bisect(packed, fences, k, lo, hi, d, tile=tile,
                               spans=spans, with_value=True)
     found = (pos < hi) & (v_at == d)
+    if alive is not None:
+        found = found & _alive_at(alive, d)
     flat = values.reshape((k_n * nmax,) + values.shape[2:])
     if value_scale is not None:
         # int8 dequant: convert+scale fused into the gather consumer, one
@@ -461,7 +492,8 @@ def _lookup_packed(term_offsets, packed, fences, values, value_scale,
 def lookup_pairs_packed_ref(term_offsets, packed, fences, values,
                             value_scale, term_to_shard, range_lo,
                             term_ids, doc_targets, split_term=None,
-                            split_doc=None, *, tile: int, spans=(0, 0)):
+                            split_doc=None, *, tile: int, spans=(0, 0),
+                            alive=None):
     """Packed-codec :func:`lookup_pairs_ref`: term_ids (..., Q) x
     doc_targets broadcastable (...,) -> (..., Q, n_b, n_f).  Ids decode
     losslessly, so found masks/positions — and with f32 ``values`` the
@@ -471,13 +503,14 @@ def lookup_pairs_packed_ref(term_offsets, packed, fences, values,
     return _lookup_packed(term_offsets, packed, fences, values,
                           value_scale, term_to_shard, range_lo,
                           split_term, split_doc, term_ids, d, tile=tile,
-                          spans=spans)
+                          spans=spans, alive=alive)
 
 
 def csr_lookup_packed_ref(term_offsets, packed, fences, values,
                           value_scale, term_to_shard, range_lo,
                           query_terms, doc_targets, split_term=None,
-                          split_doc=None, *, tile: int, spans=(0, 0)):
+                          split_doc=None, *, tile: int, spans=(0, 0),
+                          alive=None):
     """Packed-codec :func:`csr_lookup_ref`: query_terms (Q,) x
     doc_targets (B,) -> M (B, Q, n_b, n_f)."""
     shape = (doc_targets.shape[0], query_terms.shape[0])    # (B, Q)
@@ -486,13 +519,13 @@ def csr_lookup_packed_ref(term_offsets, packed, fences, values,
     return _lookup_packed(term_offsets, packed, fences, values,
                           value_scale, term_to_shard, range_lo,
                           split_term, split_doc, w, d, tile=tile,
-                          spans=spans)
+                          spans=spans, alive=alive)
 
 
 def retrieve_block_packed_ref(term_offsets, packed, fences, values,
                               value_scale, term_to_shard, range_lo,
                               range_hi, query_terms, blo, block: int,
-                              *, tile: int, spans=(0, 0)):
+                              *, tile: int, spans=(0, 0), alive=None):
     """Packed-codec :func:`retrieve_block_ref` — same lane ranges, the
     two range bisects run as packed two-level bisects, and the gathered
     id windows decode through :func:`~repro.core.codec.unpack_at`.
@@ -521,7 +554,8 @@ def retrieve_block_packed_ref(term_offsets, packed, fences, values,
     if value_scale is not None:
         scale = _lane_scale(value_scale, range_lo, ks, query_terms[:, None])
         val_win = val_win.astype(jnp.float32) * scale[..., None, None, None]
-    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block)
+    return merge_windows(doc_win, val_win, s_hi - s_lo, blo, block,
+                         alive=alive)
 
 
 # ---------------------------------------------------------------------------

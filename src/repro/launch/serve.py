@@ -19,6 +19,13 @@ give.  ``--coalesce`` dedupes (term, doc) pairs across the formed
 batch and ``--cache-tiles N`` serves hot posting tiles from a
 device-resident cache; both are exact (scores bitwise-equal to the
 per-request path).
+
+``--live`` serves through a mutable :class:`~repro.dist.live.LiveIndex`:
+the base index covers part of the corpus and a background thread ingests
+the held-back docs (and with ``--live-compact``, tombstones a few and
+runs a compaction) while the measured loop is serving — the sustained
+ingest-while-serving scenario ``benchmarks/bench_live.py`` gates.  See
+docs/serving.md for a worked example of every flag.
 """
 from __future__ import annotations
 
@@ -100,6 +107,22 @@ def main() -> None:
                          "posting tiles, serving hot tiles without "
                          "re-fetch/re-decode (requires --coalesce and "
                          "--partition term; 0 = off)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve through a mutable LiveIndex (dist.live): "
+                         "build the base from part of the corpus, ingest "
+                         "the held-back docs from a background thread "
+                         "WHILE the measured loop serves (LSM delta runs; "
+                         "requires --partition term, mesh-less only)")
+    ap.add_argument("--live-hold-frac", type=float, default=0.5,
+                    metavar="FRAC",
+                    help="fraction of the corpus held back from the base "
+                         "build and ingested live during serving "
+                         "(with --live; default 0.5)")
+    ap.add_argument("--live-compact", action="store_true",
+                    help="with --live: tombstone a few docs and run a "
+                         "background compaction (base + frozen deltas -> "
+                         "new generation, atomic epoch swap) while the "
+                         "measured loop is serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -146,6 +169,22 @@ def main() -> None:
         ap.error("--coalesce/--cache-tiles/--slo-ms/--max-batch/"
                  "--batch-timeout-ms shape the open-loop frontend; add "
                  "--target-qps QPS to enable it")
+    if args.live and args.partition != "term":
+        ap.error("--live requires --partition term (the LiveIndex base "
+                 "is the stacked-shard PartitionedIndex)")
+    if args.live and args.data_parallel:
+        ap.error("--live is mesh-less only (compaction swaps the base "
+                 "generation underneath any placement); drop "
+                 "--data-parallel")
+    if args.live and args.compare_noindex:
+        ap.error("--compare-noindex rebuilds interactions from the "
+                 "static corpus; drop it with --live")
+    if not 0.0 < args.live_hold_frac < 1.0 and args.live:
+        ap.error("--live-hold-frac must be in (0, 1), got "
+                 f"{args.live_hold_frac}")
+    if (args.live_compact or args.live_hold_frac != 0.5) and not args.live:
+        ap.error("--live-compact/--live-hold-frac shape the live index; "
+                 "add --live to enable it")
     if args.metrics_out:
         # fail now with a clear message, not a FileNotFoundError stack
         # trace after minutes of index build + serving
@@ -161,7 +200,21 @@ def main() -> None:
     toks, segs = segment_corpus(slot_docs, cfg.n_segments, max_len=160)
     provider = HashProvider(vocab.size, cfg.embed_dim, seed=args.seed)
     builder = IndexBuilder(cfg, vocab, provider)
-    if args.partition == "term":
+    held = None
+    if args.live:
+        # live mode: base index over the leading (1 - hold_frac) of the
+        # corpus; the held-back tail is ingested by a background thread
+        # while the measured loop serves
+        split = max(int(toks.shape[0] * (1.0 - args.live_hold_frac)), 1)
+        held = (toks[split:], segs[split:])
+        from ..dist.live import LiveIndex
+        base = builder.build_partitioned(
+            toks[:split], segs[:split], args.shards or 1, batch_size=16,
+            spill_dir=args.spill_dir, codec=args.codec)
+        index = LiveIndex(base, builder._pipeline(), batch_size=16)
+        _log.info("live index", base_docs=split,
+                  held_back=toks.shape[0] - split)
+    elif args.partition == "term":
         # shard-native streaming build: the index is born partitioned —
         # no host ever materialises the global doc_ids/values CSR
         index = builder.build_partitioned(
@@ -211,9 +264,40 @@ def main() -> None:
                   mesh=dict(zip(mesh.axis_names, mesh.devices.shape)))
     engine = SeineEngine(
         index, args.retriever, params, mesh=mesh,
-        partition=None if args.partition == "none" else args.partition,
-        n_shards=args.shards or None)
-    if args.partition == "term":
+        partition=(None if args.partition == "none" or args.live
+                   else args.partition),
+        n_shards=None if args.live else (args.shards or None))
+    if args.live:
+        import threading as _threading
+        import time as _time
+
+        def live_mutations():
+            # runs concurrently with the measured loop: chunked ingest
+            # of the held-back docs, then (optionally) tombstones + a
+            # compaction — the scenario BENCH_live.json gates
+            t0 = _time.perf_counter()
+            ht, hs = held
+            chunk = max(len(ht) // 4, 1)
+            for i in range(0, len(ht), chunk):
+                index.insert(ht[i:i + chunk], hs[i:i + chunk],
+                             batch_size=16)
+            dt = _time.perf_counter() - t0
+            _log.info("live ingest done", docs=len(ht),
+                      docs_per_s=f"{len(ht) / max(dt, 1e-9):.0f}",
+                      delta_nnz=index.delta_nnz)
+            if args.live_compact:
+                index.delete(np.arange(min(4, index.n_docs)))
+                index.compact()
+                _log.info("live compaction done",
+                          generation=index.generation,
+                          tombstones=index.tombstones)
+
+        ingest_thread = _threading.Thread(target=live_mutations,
+                                          daemon=True,
+                                          name="serve-live-ingest")
+    else:
+        ingest_thread = None
+    if args.partition == "term" and not args.live:
         pidx = engine.index
         _log.info(
             "term-partitioned (shard-native build)",
@@ -233,7 +317,11 @@ def main() -> None:
         qs = [q for q, _ in requests]
         _, stats = serve_retrieval(engine, qs, args.retrieve_k)  # warm
         hb.beat(0)
+        if ingest_thread is not None:
+            ingest_thread.start()
         results, stats = serve_retrieval(engine, qs, args.retrieve_k)
+        if ingest_thread is not None:
+            ingest_thread.join()
         hb.beat(0)  # final beat AFTER the loop drains, so the age gauge
         #             in the snapshot reflects a live rank, not the
         #             whole measured loop's duration
@@ -260,8 +348,12 @@ def main() -> None:
         for q, d in requests[:args.max_batch]:
             frontend.submit(q, d).result()
         frontend.stats = ServeStats()
+        if ingest_thread is not None:
+            ingest_thread.start()
         res = run_open_loop(frontend, requests,
                             target_qps=args.target_qps, seed=args.seed)
+        if ingest_thread is not None:
+            ingest_thread.join()
         frontend.close()  # drains every admitted request
         hb.beat(0)        # final beat lands AFTER the drain, so the
         #                   snapshot's age gauge reflects a live rank
@@ -283,13 +375,19 @@ def main() -> None:
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)  # warm + measure
     hb.beat(0)
+    if ingest_thread is not None:
+        ingest_thread.start()
     scores, stats = serve_batches(engine, requests,
                                   batch_pad=args.batch_pad)
+    if ingest_thread is not None:
+        ingest_thread.join()
     hb.beat(0)  # final beat AFTER the measured loop drains (see above)
     hb.dead_ranks()                      # records heartbeat-age gauges
     _log.info("SEINE", ms_per_request=f"{stats.ms_per_request:.2f}",
               p50=f"{stats.p50_ms:.2f}", p95=f"{stats.p95_ms:.2f}",
-              requests=args.n_queries, candidates=n_cand)
+              requests=args.n_queries, candidates=n_cand,
+              **(dict(live_docs=index.n_docs,
+                      generation=index.generation) if args.live else {}))
 
     if args.compare_noindex:
         noidx = NoIndexEngine(builder, index, toks, segs, args.retriever,

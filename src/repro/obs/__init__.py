@@ -87,6 +87,16 @@ seine_tile_cache_misses_total         counter   tiles fetched on miss
 seine_tile_cache_evictions_total      counter   tiles evicted (LRU)
 seine_tile_cache_overflow_pairs_total counter   pairs spilled past budget
 seine_tile_cache_size_tiles           gauge     tiles resident in cache
+seine_live_docs                       gauge     docs visible in the live view
+seine_live_delta_nnz                  gauge     postings in delta runs
+seine_live_delta_runs                 gauge     device-resident delta runs
+seine_live_tombstones                 gauge     dead doc ids (persist compact)
+seine_live_generation                 gauge     base generation (compactions)
+seine_live_ingest_docs_total          counter   docs inserted into the delta
+seine_live_deletes_total              counter   doc ids tombstoned
+seine_live_compactions_total          counter   compactions folded into base
+seine_live_compaction_errors_total    counter   background compaction failures
+seine_frontend_epoch_swaps_total      counter   frontend engine epoch swaps
 seine_lookup_found_ratio              gauge     found-mask hit rate (sampled)
 seine_lookup_found_total              counter   found pairs (sampled)
 seine_lookup_pairs_sampled_total      counter   looked-up pairs (sampled)
@@ -109,6 +119,14 @@ seine_span_seconds_total              counter   span time {span=} (exporter)
 seine_span_count_total                counter   span entries {span=}
 seine_span_last_seconds               gauge     last span duration {span=}
 ===================================== ========= =============================
+
+Span names follow the lifecycle: ``build.stream_runs`` /
+``build.stage1.uniq``..``build.stage4.merge``, ``serve.request`` /
+``serve.retrieve`` / ``frontend.batch``, ``ckpt.save`` /
+``ckpt.save_index``, ``train.step``, and the live-index pair
+``live.ingest`` / ``live.compact`` (the background merge, so compaction
+wall-time shows up in ``seine_span_seconds_total`` even though it never
+blocks a query).
 """
 from .export import (dump, parse_prometheus, snapshot, to_prometheus,
                      write_metrics)

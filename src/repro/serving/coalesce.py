@@ -174,24 +174,72 @@ class CoalescingScorer:
         self.spec = engine.spec
         self.cache = cache
         self.pair_pad = int(pair_pad)
+        self._live = bool(getattr(engine.index, "is_live", False))
         index, spec = self.index, self.spec
 
-        def pair_lookup(t, d):
-            # (P,) x (P,) -> (P, n_b, n_f): lookup_pairs takes (..., Q)
-            # term ids against (...,) docs, so a Q=1 axis is added and
-            # stripped — one routed bisect per distinct pair, on the
-            # raw or packed path the index itself dispatches
-            return index.lookup_pairs(t[:, None], d)[:, 0]
+        self._batch_view = None
+        if self._live:
+            # live index: every jit takes a LiveView as a pytree
+            # ARGUMENT (the same pattern as the engine's live mode), so
+            # compiled programs are keyed on shapes and always consume
+            # the snapshot the batch pinned — a captured-index jit would
+            # serve trace-time arrays forever.  score_batch pins ONE
+            # view for its whole batch (_current_view), so the lookup,
+            # the delta tail and every per-request score see the same
+            # snapshot even if mutations land mid-batch.
+            def pair_lookup_view(view, t, d):
+                return view.lookup_pairs(t[:, None], d)[:, 0]
 
-        self._pair_lookup = jax.jit(pair_lookup)
+            self._plv = jax.jit(pair_lookup_view)
+            self._pair_lookup = (
+                lambda t, d: self._plv(self._current_view(), t, d))
 
-        def score_one(params, vals, inv, query_terms, doc_ids):
-            m = vals[inv].reshape((doc_ids.shape[0], query_terms.shape[0])
-                                  + vals.shape[1:])
-            meta = make_qmeta(index, query_terms, doc_ids)
-            return spec.score(params, m, meta, index.functions)
+            def pair_tail_view(view, t, d, base_vals):
+                # the tile cache resolved the pairs against view.base
+                # only (it binds one immutable generation): add the
+                # delta's rows — exclusive doc-space ownership makes the
+                # sum exact — and fold the tombstone mask
+                if view.delta is not None:
+                    base_vals = base_vals \
+                        + view.delta.lookup_pairs(t[:, None], d)[:, 0]
+                if view.alive is not None:
+                    dead_ok = view.alive.at[d].get(mode="clip")
+                    base_vals = jnp.where(dead_ok[:, None, None],
+                                          base_vals, 0.0)
+                return base_vals
 
-        self._score_one = jax.jit(score_one)
+            self._pair_tail = jax.jit(pair_tail_view)
+
+            def score_one_view(params, view, vals, inv, query_terms,
+                               doc_ids):
+                m = vals[inv].reshape(
+                    (doc_ids.shape[0], query_terms.shape[0])
+                    + vals.shape[1:])
+                meta = make_qmeta(view, query_terms, doc_ids)
+                return spec.score(params, m, meta, view.functions)
+
+            sov = jax.jit(score_one_view)
+            self._score_one = (
+                lambda params, vals, inv, q, d:
+                sov(params, self._current_view(), vals, inv, q, d))
+        else:
+            def pair_lookup(t, d):
+                # (P,) x (P,) -> (P, n_b, n_f): lookup_pairs takes
+                # (..., Q) term ids against (...,) docs, so a Q=1 axis is
+                # added and stripped — one routed bisect per distinct
+                # pair, on the raw or packed path the index dispatches
+                return index.lookup_pairs(t[:, None], d)[:, 0]
+
+            self._pair_lookup = jax.jit(pair_lookup)
+
+            def score_one(params, vals, inv, query_terms, doc_ids):
+                m = vals[inv].reshape(
+                    (doc_ids.shape[0], query_terms.shape[0])
+                    + vals.shape[1:])
+                meta = make_qmeta(index, query_terms, doc_ids)
+                return spec.score(params, m, meta, index.functions)
+
+            self._score_one = jax.jit(score_one)
         self._pairs_counter = obs.counter(
             "seine_coalesce_pair_slots_total",
             "pre-dedupe (term, doc) pair slots submitted")
@@ -202,9 +250,34 @@ class CoalescingScorer:
             "seine_coalesce_dedupe_ratio",
             "distinct / submitted pair slots, last batch")
 
+    def _current_view(self):
+        """The batch-pinned LiveView, or a fresh snapshot outside a
+        batch (live mode only)."""
+        v = self._batch_view
+        return v if v is not None else self.index.view
+
     def lookup_distinct(self, terms: np.ndarray, docs: np.ndarray):
-        """(P,) distinct pairs -> (P, n_b, n_f) value rows (device)."""
+        """(P,) distinct pairs -> (P, n_b, n_f) value rows (device).
+
+        With a tile cache under a live index, the cache serves the BASE
+        generation's rows and the delta/tombstone tail is applied on
+        top per call — exact, and still one cached-tile probe per pair.
+        If a compaction swapped the base under the batch before the
+        frontend rebound the cache, the cache is bypassed for this call
+        (the plain view-consistent lookup) rather than mixing rows of
+        two generations.
+        """
         if self.cache is not None:
+            if self._live:
+                view = self._current_view()
+                if view.base is not self.cache.index:
+                    # torn-epoch guard: cache still bound to the old
+                    # generation — serve snapshot-consistent instead
+                    return self._plv(view, jnp.asarray(terms),
+                                     jnp.asarray(docs))
+                vals = self.cache.lookup(terms, docs)
+                return self._pair_tail(view, jnp.asarray(terms),
+                                       jnp.asarray(docs), vals)
             return self.cache.lookup(terms, docs)
         return self._pair_lookup(jnp.asarray(terms), jnp.asarray(docs))
 
@@ -219,10 +292,19 @@ class CoalescingScorer:
             self._pairs_counter.inc(slots)
             self._distinct_counter.inc(n_distinct)
             self._dedupe_gauge.set(n_distinct / max(slots, 1))
-        vals = self.lookup_distinct(terms, docs)
-        out = []
-        for (q, d), inv in zip(requests, inverses):
-            out.append(self._score_one(self.engine.params, vals,
-                                       jnp.asarray(inv), jnp.asarray(q),
-                                       jnp.asarray(d)))
+        if self._live:
+            # pin ONE snapshot for the whole batch: lookup, delta tail
+            # and every per-request score resolve against it, so a
+            # mutation landing mid-batch can never mix snapshots
+            self._batch_view = self.index.view
+        try:
+            vals = self.lookup_distinct(terms, docs)
+            out = []
+            for (q, d), inv in zip(requests, inverses):
+                out.append(self._score_one(self.engine.params, vals,
+                                           jnp.asarray(inv),
+                                           jnp.asarray(q),
+                                           jnp.asarray(d)))
+        finally:
+            self._batch_view = None
         return out

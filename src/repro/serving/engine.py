@@ -41,6 +41,11 @@ def _sample_every() -> int:
 
 def make_qmeta(index: PairLookupIndex, query_terms: jnp.ndarray,
                doc_ids: jnp.ndarray) -> QMeta:
+    """Per-(query, candidate) scoring metadata: query mask/idf plus the
+    candidates' doc/segment lengths and the corpus ``avg_dl`` — the
+    side inputs every retriever's ``spec.score`` consumes next to M.
+    Pad query slots (term id < 0) get zero mask/idf; ``doc_ids`` must
+    already be clipped to ``[0, n_docs)`` by the caller."""
     return QMeta(
         q_mask=(query_terms >= 0).astype(jnp.float32),
         q_idf=index.idf.at[query_terms.clip(0)].get(mode="clip")
@@ -128,7 +133,24 @@ class SeineEngine:
         # it ever is (latent AttributeError — _data_axes was only assigned
         # under `mesh is not None`)
         self._data_axes = ()
-        if isinstance(index, PartitionedIndex):
+        self._live = bool(getattr(index, "is_live", False))
+        if self._live:
+            # a LiveIndex mutates underneath the engine, so its serve
+            # snapshot rides through jit as an ARGUMENT (see _score below)
+            # — placement/partitioning of a moving target is out of scope
+            if mesh is not None:
+                raise ValueError(
+                    "a LiveIndex cannot serve under a mesh: compaction "
+                    "swaps the base generation underneath the placement")
+            if partition is not None:
+                raise ValueError(
+                    "a LiveIndex is already partitioned (its base); "
+                    "pass partition=None")
+            if codec != "none" and codec != index.codec:
+                raise ValueError(
+                    f"engine codec {codec!r} conflicts with the live "
+                    f"index's base codec {index.codec!r}")
+        elif isinstance(index, PartitionedIndex):
             # born-sharded (builder.build_partitioned): use it as-is; it
             # carries its own codec — a conflicting request is a config
             # error, not something to re-encode silently
@@ -186,13 +208,30 @@ class SeineEngine:
         # (partial-sum merge -> all-reduce over the model axis)
         self._lookup_impl = "jnp" if mesh is not None else "fused"
         self._lookup_tile = lookup_tile
-        self._score = jax.jit(self._score_impl)
+        if self._live:
+            # live mode: the jitted programs take the current LiveView as
+            # a pytree argument — compiled code is keyed on array shapes,
+            # never on array VALUES, so inserts/deletes/compactions are
+            # picked up by the very next call (a captured-constant jit
+            # would silently serve the trace-time snapshot forever)
+            score_view = jax.jit(self._score_view_impl)
+            self._score = (lambda params, qt, docs:
+                           score_view(params, self.index.view, qt, docs))
+            retrieve_view = jax.jit(self._retrieve_view_impl,
+                                    static_argnames=("k", "doc_block"))
+            self._retrieve = (
+                lambda params, qt, *, k, doc_block:
+                retrieve_view(params, self.index.view, qt, k=k,
+                              doc_block=doc_block))
+        else:
+            self._score = jax.jit(self._score_impl)
         # sampled lookup-stats state (mesh-less only; see score()).  The
         # found-count helper is a SEPARATE lazy jit so sampling can never
         # perturb the gated ``_score`` program or its compile cache.
         self._n_calls = 0
         self._found_fn = None
         self._t2s_host = None
+        self._t2s_gen = -1
         self._sample_every = _sample_every()
         # serve loops flip this on so a sampled call only STAGES its
         # arguments here; the extra device lookup + blocking int() syncs
@@ -202,8 +241,9 @@ class SeineEngine:
         # first-stage retrieval: one jit per static k (jax caches per
         # (k, doc_block) pair); retrieve() trims k > n_docs before jitting
         # so a sweep of oversized ks shares one compiled program
-        self._retrieve = jax.jit(self._retrieve_impl,
-                                 static_argnames=("k", "doc_block"))
+        if not self._live:
+            self._retrieve = jax.jit(self._retrieve_impl,
+                                     static_argnames=("k", "doc_block"))
         self._retrieves_counter = obs.counter(
             "seine_engine_retrieves_total", "engine.retrieve calls")
         # per-call registry lookups hoisted to construction: score() is
@@ -231,6 +271,32 @@ class SeineEngine:
                                  tile=self._lookup_tile)
         meta = make_qmeta(self.index, query_terms, doc_ids)
         return self.spec.score(params, m, meta, self.index.functions)
+
+    def _score_view_impl(self, params, view, query_terms, doc_ids):
+        """Live-mode scorer: identical math to :meth:`_score_impl`, but
+        every index array comes in through ``view`` (a LiveView pytree
+        argument), so the compiled program serves whatever snapshot the
+        caller just read."""
+        m = view.qd_matrix(query_terms, doc_ids, impl=self._lookup_impl,
+                           tile=self._lookup_tile)
+        meta = make_qmeta(view, query_terms, doc_ids)
+        return self.spec.score(params, m, meta, view.functions)
+
+    def _retrieve_view_impl(self, params, view, query_terms, k, doc_block):
+        """Live-mode first-stage retrieval over a LiveView argument —
+        the base drives the block scan, the delta joins through the
+        driver's ``extra_m_fn`` hook, tombstones mask to ``-inf``."""
+        n_docs = view.n_docs
+
+        def score_block(m, docs):
+            d = docs.clip(0, n_docs - 1)
+            meta = make_qmeta(view, query_terms, d)
+            return self.spec.score(params, m, meta, view.functions)
+
+        return view.retrieve_topk(query_terms, k, score_block,
+                                  doc_block=doc_block,
+                                  impl=self._lookup_impl,
+                                  tile=self._lookup_tile)
 
     def _retrieve_impl(self, params, query_terms, k, doc_block):
         index = self.index
@@ -314,6 +380,11 @@ class SeineEngine:
         call, entirely outside the serving ``_score`` program."""
         index = self.index
         from ..dist.partition import PartitionedIndex
+        if self._live:
+            # live: the module-level jit takes the view as an argument,
+            # so the sampled stats track mutations like the scorer does
+            from ..dist.live import found_counts
+            return lambda qt, docs: found_counts(index.view, qt, docs)
         if not isinstance(index, PartitionedIndex):
             def impl(qt, docs):
                 q = jnp.broadcast_to(qt[None], (docs.shape[0],) + qt.shape)
@@ -375,8 +446,13 @@ class SeineEngine:
         if self._found_fn is None:
             self._found_fn = self._make_found_fn()
             from ..dist.partition import PartitionedIndex
-            if isinstance(self.index, PartitionedIndex):
+            if isinstance(self.index, PartitionedIndex) or self._live:
                 self._t2s_host = np.asarray(self.index.term_to_shard)
+        if self._live and self.index.generation != self._t2s_gen:
+            # compaction re-plans the term routing table; refresh the
+            # host copy once per generation
+            self._t2s_host = np.asarray(self.index.term_to_shard)
+            self._t2s_gen = self.index.generation
         found, total = self._found_fn(query_terms, doc_ids)
         found, total = int(found), int(total)
         obs.counter("seine_lookup_found_total",

@@ -82,6 +82,20 @@ class ServingFrontend:
     resolving to the (B,) scores (host array); a dedicated worker thread
     forms and serves batches.  ``close`` drains every admitted request
     before joining the worker, so no future is left forever pending.
+
+    Batch formation: a batch closes at ``max_batch`` requests or
+    ``batch_timeout_ms`` after its first dequeue, whichever comes first;
+    ``slo_ms`` rejects requests already past their deadline at dequeue
+    (:class:`DeadlineExceeded`) instead of serving them late.
+    ``coalesce`` dedupes (term, doc) pairs across the formed batch and
+    ``cache_tiles`` keeps hot posting tiles device-resident — both
+    exact (scores stay bitwise-equal to ``engine.score``).
+
+    Live serving: :meth:`swap_engine` stages a replacement engine (e.g.
+    over a freshly compacted :class:`~repro.dist.live.LiveIndex`
+    generation) that the worker installs atomically between batches —
+    the in-process half of an epoch swap, counted by
+    ``seine_frontend_epoch_swaps_total``.
     """
 
     def __init__(self, engine, *, max_batch: int = 8,
@@ -108,12 +122,28 @@ class ServingFrontend:
         self.batch_timeout_s = batch_timeout_ms / 1e3
         self.batch_pad = int(batch_pad)
         self.slo_ms = slo_ms
-        self.cache = (PostingTileCache(engine.index, cache_tiles)
-                      if cache_tiles > 0 else None)
+        self.pair_pad = int(pair_pad)
+        self._coalesce = bool(coalesce)
+        # a LiveIndex's tile cache binds the immutable BASE generation
+        # (the delta/tombstone tail is applied per batch by the
+        # coalescer); compaction bumps index.generation and the worker
+        # rebinds between batches — see _apply_swaps
+        live = bool(getattr(engine.index, "is_live", False))
+        self.cache = (PostingTileCache(
+            engine.index.base if live else engine.index, cache_tiles)
+            if cache_tiles > 0 else None)
         self.scorer = (CoalescingScorer(engine, cache=self.cache,
                                         pair_pad=pair_pad)
                        if coalesce else None)
         self.stats = ServeStats()
+        # epoch-swap plumbing: a staged engine is installed by the
+        # WORKER between batches, never mid-batch — in-flight requests
+        # always finish against the engine that started them
+        self._staged_engine = None
+        self._live_gen = getattr(engine.index, "generation", None)
+        self._swap_counter = obs.counter(
+            "seine_frontend_epoch_swaps_total",
+            "engine/generation swaps applied between batches")
         self._req_counter = obs.counter("seine_frontend_requests_total",
                                         "requests admitted to the queue")
         self._batch_counter = obs.counter("seine_frontend_batches_total",
@@ -137,6 +167,20 @@ class ServingFrontend:
         self._req_counter.inc()
         self._queue.put(req)
         return req.future
+
+    def swap_engine(self, engine) -> None:
+        """Stage a new engine for an atomic epoch swap.
+
+        The worker installs it BETWEEN batches: the batch being served
+        keeps its engine/scorer/cache to completion, the next batch sees
+        only the new ones — no request ever scores against a torn
+        mixture of generations.  The tile cache rebinds (invalidating
+        every cached tile) and the coalescing scorer is rebuilt, so no
+        jit-captured arrays of the old index survive the swap.
+        """
+        if self._closed:
+            raise RuntimeError("frontend is closed")
+        self._staged_engine = engine
 
     def close(self) -> None:
         """Drain every admitted request, then stop the worker."""
@@ -186,11 +230,39 @@ class ServingFrontend:
         self.stats.note_queue_depth(self._queue.qsize())
         return batch
 
+    def _apply_swaps(self) -> None:
+        """Install any staged engine and track the live index's
+        generation — both BETWEEN batches only (worker thread).  A
+        compaction inside a LiveIndex publishes its new base atomically
+        (readers are snapshot-safe already); the frontend's only job is
+        to rebind the tile cache, whose cached tiles belong to the old
+        generation's layout."""
+        staged, self._staged_engine = self._staged_engine, None
+        if staged is not None:
+            self.engine = staged
+            idx = staged.index
+            if self.cache is not None:
+                self.cache.swap_index(
+                    idx.base if getattr(idx, "is_live", False) else idx)
+            if self._coalesce:
+                self.scorer = CoalescingScorer(staged, cache=self.cache,
+                                               pair_pad=self.pair_pad)
+            self._live_gen = getattr(idx, "generation", None)
+            self._swap_counter.inc()
+            return
+        gen = getattr(self.engine.index, "generation", None)
+        if gen is not None and gen != self._live_gen:
+            if self.cache is not None:
+                self.cache.swap_index(self.engine.index.base)
+            self._live_gen = gen
+            self._swap_counter.inc()
+
     def _run(self) -> None:
         while True:
             batch = self._form_batch()
             if batch is None:
                 return
+            self._apply_swaps()
             try:
                 self._serve(batch)
             except BaseException as e:  # worker must survive; futures carry

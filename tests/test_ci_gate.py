@@ -154,7 +154,7 @@ class TestGateCli:
 
     def _run(self, tmp_path, serve=None, baseline=None, threshold="1.3",
              retrieval="default", compressed="default",
-             frontend="default"):
+             frontend="default", live="default"):
         import json
         import shutil
         root = tmp_path / "repo"
@@ -178,6 +178,10 @@ class TestGateCli:
         if frontend is not None:
             (root / "BENCH_frontend.json").write_text(
                 json.dumps(frontend))
+        if live == "default":
+            live = self.GOOD_LIVE
+        if live is not None:
+            (root / "BENCH_live.json").write_text(json.dumps(live))
         args = [sys.executable, "scripts/bench_gate.py",
                 "--threshold", threshold]
         if baseline is not None:
@@ -224,6 +228,19 @@ class TestGateCli:
                                  "pass": True}}},
         "paths": {"naive": {"p95_ms": 90.0, "goodput": 0.8},
                   "coalesced_cached": {"p95_ms": 36.0, "goodput": 1.0}},
+    }
+    GOOD_LIVE = {
+        "live_ingest_gate": {
+            "metric": "i", "pass": True, "ingest_fraction": 0.6,
+            "quiescent_docs_per_s": 30.0, "concurrent_docs_per_s": 18.0,
+            "floor": 0.25, "noise_floor": 0.98, "effective_floor": 0.245},
+        "live_p95_gate": {
+            "metric": "p", "pass": True, "p95_ratio": 1.05,
+            "quiescent_p95_us": 2000.0, "compacting_p95_us": 2100.0,
+            "ceiling": 1.3, "noise_floor": 1.01,
+            "effective_ceiling": 1.313},
+        "paths": {"ingest": {"concurrent_docs_per_s": 18.0},
+                  "serve": {"compacting_p95_us": 2100.0}},
     }
 
     def test_missing_file_is_distinct_exit_code(self, gate, tmp_path):
@@ -298,6 +315,31 @@ class TestGateCli:
         r = self._run(tmp_path, serve=self.GOOD_SERVE, frontend=front)
         assert r.returncode == gate.EXIT_FAIL
         assert "frontend p95 gate" in r.stdout
+
+    def test_missing_live_file_is_distinct_exit_code(self, gate, tmp_path):
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, live=None)
+        assert r.returncode == gate.EXIT_MISSING
+        assert "BENCH_live.json" in r.stdout
+
+    def test_live_gate_failure_exits_one(self, gate, tmp_path):
+        live = dict(self.GOOD_LIVE)
+        live["live_p95_gate"] = dict(
+            live["live_p95_gate"],
+            **{"pass": False, "p95_ratio": 2.4})
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, live=live)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "live p95 gate" in r.stdout
+
+    def test_live_ingest_baseline_regression_exits_one(self, gate,
+                                                       tmp_path):
+        """The sustained ingest rate rides the relative comparison: a
+        collapse vs the committed snapshot fails even while the
+        absolute fraction-of-quiescent gate still passes."""
+        baseline = {"BENCH_live.json": {
+            "paths": {"ingest": {"concurrent_docs_per_s": 60.0}}}}
+        r = self._run(tmp_path, serve=self.GOOD_SERVE, baseline=baseline)
+        assert r.returncode == gate.EXIT_FAIL
+        assert "regressed" in r.stdout
 
     def test_frontend_p95_baseline_regression_exits_one(self, gate,
                                                         tmp_path):
